@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: paper-style timing (min of K repeats) and
+HLO cost extraction for schedule-level comparisons."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Minimum wall time over ``repeats`` calls (paper §5: 'we take the
+    minimum execution time')."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def hlo_cost(fn: Callable, *args) -> dict:
+    """flops / bytes-accessed of the compiled function (schedule metric:
+    bytes-accessed is the memory-traffic term the depth-first schedule
+    attacks)."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0))}
+
+
+def write_csv(path: str, header: list[str], rows: list) -> None:
+    import os
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for row in rows:
+            f.write(",".join(str(x) for x in row) + "\n")

@@ -1,0 +1,105 @@
+"""Paper Fig. 10: stacked <MaxPool(3x3,s1,p1), BatchNorm, ReLU> blocks.
+
+Three measurements per block count N and sequence strategy
+(1 step / 5 steps / unrestricted):
+
+* ``n_sequences`` — how many fused kernels the Collapser emits.  On the
+  paper-faithful tiny budget this reproduces the Fig. 10 cache-overflow
+  artifact (sequence count jumps when stacked pooling halos overflow the
+  budget).
+* wall time, breadth-first (barrier) vs depth-first-fused (xla closure) —
+  the CPU-measurable schedule effect (the paper's PyTorch-vs-BrainSlug
+  axis).  The Pallas kernels are validated for correctness elsewhere;
+  interpret-mode wall time is not meaningful and is not reported.
+* HLO bytes-accessed for both schedules — the memory-traffic term the
+  depth-first schedule removes (hardware-independent).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import api, collapse, ir, resource
+from repro.models import cnn
+
+
+def _block_plan(n_blocks: int, channels: int, device, max_steps=None,
+                hw: int = 32):
+    graph, _ = cnn.block_net(n_blocks, channels=channels)
+    prog = ir.StackProgram(name="s", inputs=("x",),
+                           outputs=(graph.ops[-1].output,),
+                           ops=graph.ops, layout="nhwc")
+    shapes = {"x": (1, hw, hw, channels)}
+    plan = collapse.collapse(prog, shapes, device, itemsize=4,
+                             max_steps_per_sequence=max_steps)
+    return prog, plan, shapes
+
+
+def sequence_counts(n_blocks: int, channels: int, device, max_steps=None
+                    ) -> int:
+    return len(_block_plan(n_blocks, channels, device, max_steps)[1]
+               .sequences)
+
+
+def traffic_ratio(n_blocks: int, channels: int, device, max_steps=None
+                  ) -> float:
+    """Breadth-first / depth-first HBM traffic (the paper's win metric)."""
+    prog, plan, shapes = _block_plan(n_blocks, channels, device, max_steps)
+    bf = resource.breadth_first_traffic(prog, shapes, 4)
+    df = resource.depth_first_traffic(plan, shapes, 4)
+    return bf / max(df, 1)
+
+
+def run(block_counts=(1, 2, 4, 8, 12, 16, 24, 32, 40), channels=32,
+        batch=8, hw=16, out_csv="results/bench/fig10.csv") -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # paper-faithful tiny budget (the 16 kB shared-memory analogue) for the
+    # artifact curve; TPU budget for the production sequence counts.
+    tiny = resource.TINY_DEVICE
+    tpu = resource.TPU_V5E
+    for n in block_counts:
+        graph, params = cnn.block_net(n, channels=channels)
+        x = jax.random.normal(key, (batch, hw, hw, channels), jnp.float32)
+
+        nets = {
+            "barrier": api.optimize_graph(
+                graph, x.shape, api.OptimizeConfig(mode="barrier")),
+            "fused": api.optimize_graph(
+                graph, x.shape, api.OptimizeConfig(mode="xla")),
+        }
+        times, bytes_ = {}, {}
+        for name, net in nets.items():
+            fn = jax.jit(lambda xx, pp, net=net: net(xx, pp))
+            times[name] = common.time_fn(fn, x, params)
+            bytes_[name] = common.hlo_cost(
+                lambda xx, pp, net=net: net(xx, pp), x, params)["bytes"]
+
+        row = {
+            "blocks": n,
+            "seq_tiny_unrestricted": sequence_counts(n, channels, tiny),
+            "seq_tiny_max5": sequence_counts(n, channels, tiny, 5),
+            "seq_tiny_max1": sequence_counts(n, channels, tiny, 1),
+            "seq_tpu_unrestricted": sequence_counts(n, channels, tpu),
+            "traffic_ratio_tpu": traffic_ratio(n, channels, tpu),
+            "traffic_ratio_tiny": traffic_ratio(n, channels, tiny),
+            "traffic_ratio_tiny_max1": traffic_ratio(n, channels, tiny, 1),
+            "t_barrier_ms": times["barrier"] * 1e3,
+            "t_fused_ms": times["fused"] * 1e3,
+            "speedup": times["barrier"] / times["fused"],
+        }
+        rows.append(row)
+        print(f"[fig10] blocks={n:3d} seqs(tiny)={row['seq_tiny_unrestricted']:2d} "
+              f"traffic_ratio tpu={row['traffic_ratio_tpu']:5.2f}x "
+              f"tiny={row['traffic_ratio_tiny']:5.2f}x "
+              f"max1={row['traffic_ratio_tiny_max1']:5.2f}x "
+              f"wall {times['barrier']/times['fused']:.2f}x", flush=True)
+    common.write_csv(out_csv, list(rows[0]), [list(r.values()) for r in rows])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Fig. 15: batch-size scaling of the schedule effect.
+
+One LM block chain (residual+RMSNorm -> SwiGLU gate -> residual+RMSNorm)
+at batch sizes 1..256: breadth-first (barrier) vs depth-first-fused wall
+time per token.  The paper's observation — the depth-first advantage grows
+then saturates with batch — reproduces at the memory-traffic level.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.layers import stacks
+
+
+def block_chain(mode: str):
+    def fn(x, res, wg, wu, scale1, scale2):
+        h1, res = stacks.add_norm(x, res, scale1, None, mode=mode)
+        g = h1 @ wg
+        u = h1 @ wu
+        glu = stacks.glu(g, u, act="silu", mode=mode)
+        y, res = stacks.add_norm(glu @ wu.T, res, scale2, None, mode=mode)
+        return y, res
+    return fn
+
+
+def run(batches=(1, 2, 4, 8, 16, 32, 64, 128, 256), seq=128, d=256, f=512,
+        out_csv="results/bench/fig15.csv"):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    wg = jax.random.normal(ks[0], (d, f), jnp.float32) / d ** 0.5
+    wu = jax.random.normal(ks[1], (d, f), jnp.float32) / d ** 0.5
+    s1 = jnp.ones((d,))
+    s2 = jnp.ones((d,))
+    rows = []
+    for b in batches:
+        x = jax.random.normal(ks[2], (b, seq, d), jnp.float32)
+        res = jax.random.normal(ks[3], (b, seq, d), jnp.float32)
+        t = {}
+        for mode in ("barrier", "xla"):
+            fn = jax.jit(block_chain(mode))
+            t[mode] = common.time_fn(fn, x, res, wg, wu, s1, s2)
+        tokens = b * seq
+        row = dict(batch=b,
+                   barrier_us_per_tok=t["barrier"] / tokens * 1e6,
+                   fused_us_per_tok=t["xla"] / tokens * 1e6,
+                   speedup=t["barrier"] / t["xla"])
+        rows.append(row)
+        print(f"[fig15] batch={b:4d} barrier={row['barrier_us_per_tok']:7.3f}us/tok "
+              f"fused={row['fused_us_per_tok']:7.3f}us/tok "
+              f"speedup={row['speedup']:.2f}x", flush=True)
+    common.write_csv(out_csv, list(rows[0]), [list(r.values()) for r in rows])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

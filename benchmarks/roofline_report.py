@@ -1,0 +1,34 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``results/dryrun/*.json`` (run ``python -m repro.launch.dryrun --all
+--mesh both`` first) and emits per-cell roofline terms + bottleneck.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro import roofline
+
+
+def run(result_dir="results/dryrun", mesh="single",
+        out_csv="results/bench/roofline.csv"):
+    cells = roofline.load_cells(result_dir, mesh=mesh)
+    if not cells:
+        print(f"[roofline] no dry-run artifacts under {result_dir}; "
+              "run `python -m repro.launch.dryrun --all` first")
+        return []
+    rows = sorted((roofline.analyze(c) for c in cells),
+                  key=lambda r: (r.arch, r.shape))
+    print(roofline.table(rows))
+    common.write_csv(
+        out_csv,
+        ["arch", "shape", "mesh", "t_compute", "t_memory", "t_collective",
+         "bottleneck", "t_bound", "useful_fraction", "roofline_fraction"],
+        [[r.arch, r.shape, r.mesh, f"{r.t_compute:.6f}",
+          f"{r.t_memory:.6f}", f"{r.t_collective:.6f}", r.bottleneck,
+          f"{r.t_bound:.6f}", f"{r.useful_fraction:.4f}",
+          f"{r.roofline_fraction:.4f}"] for r in rows])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark entry point — one bench per paper table/figure.
+
+  fig10    stacked <MaxPool,BN,ReLU> blocks (strategies + overflow artifact)
+  table2   full-network census + schedule speed-up (CNN zoo + LM archs)
+  fig15    batch-size scaling of the schedule effect
+  roofline three-term roofline per dry-run cell (needs results/dryrun)
+
+``python -m benchmarks.run`` runs everything with CPU-sized defaults and
+writes CSVs under results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("benches", nargs="*",
+                    default=["fig10", "table2", "fig15", "roofline"])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller grids (CI mode)")
+    args = ap.parse_args(argv)
+    t0 = time.time()
+
+    for bench in args.benches:
+        print(f"\n===== {bench} =====", flush=True)
+        if bench == "fig10":
+            from benchmarks import fig10_stacked_layers as m
+            m.run(block_counts=(1, 4, 16) if args.quick
+                  else (1, 2, 4, 8, 12, 16, 24, 32, 40))
+        elif bench == "table2":
+            from benchmarks import table2_networks as m
+            m.run_cnns()
+            m.run_lms()
+        elif bench == "fig15":
+            from benchmarks import fig15_batch_scaling as m
+            m.run(batches=(1, 8, 64) if args.quick
+                  else (1, 2, 4, 8, 16, 32, 64, 128, 256))
+        elif bench == "roofline":
+            from benchmarks import roofline_report as m
+            m.run()
+        else:
+            print(f"unknown bench {bench!r}", file=sys.stderr)
+            return 2
+    print(f"\n[benchmarks] done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,210 @@
+"""Paper Tables 1-2: full-network acceleration + optimizable-layer census.
+
+Two network families:
+
+* the paper's own domain — VGG-style CNNs (with/without BatchNorm) and the
+  synthetic block nets, run through the transparent ``optimize_graph`` path;
+* the assigned LM architectures (reduced configs) through the composable
+  stack path, mode barrier (breadth-first baseline) vs xla-fused
+  (depth-first schedule at the XLA level).
+
+Columns mirror Table 2: total ops, optimizable ops, #stacks, % of ops
+optimized, plus wall-time speed-up and the bytes-accessed ratio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import RuntimeConfig
+from repro.core import analyzer, api
+from repro.data import pipeline as data_mod
+from repro.configs.base import ShapeConfig
+from repro.models import cnn, lm
+
+
+def cnn_schedule_traffic(net, params, itemsize: int = 4) -> dict:
+    """Analytic HBM traffic of an optimized CNN under both schedules: stacks
+    use the breadth-vs-depth traffic model; opaque ops (conv / matmul / gap)
+    read inputs+weights and write outputs identically in both."""
+    from repro.core import resource
+
+    stack_bf = stack_df = rest = 0
+    for idx, seg in enumerate(net.segments):
+        if seg.is_stack:
+            plan = net.plans[idx]
+            in_shapes = {v: net.shapes[v] for v in seg.stack.inputs}
+            stack_bf += resource.breadth_first_traffic(
+                seg.stack, in_shapes, itemsize)
+            stack_df += resource.depth_first_traffic(
+                plan, in_shapes, itemsize)
+        else:
+            op = seg.op
+            for v in op.inputs:
+                rest += resource._nbytes(net.shapes[v], itemsize)
+            rest += resource._nbytes(net.shapes[op.output], itemsize)
+            for p in op.params:
+                rest += int(params[p].size) * itemsize
+    total_bf = stack_bf + rest
+    total_df = stack_df + rest
+    return {
+        "opt_ratio": stack_bf / max(stack_df, 1),
+        "pct_of_total": 100.0 * stack_bf / max(total_bf, 1),
+        "total_speedup_pct": 100.0 * (total_bf / max(total_df, 1) - 1.0),
+    }
+
+
+def cnn_zoo():
+    return {
+        "blocknet8": lambda: cnn.block_net(8, channels=32),
+        "vgg-s": lambda: cnn.vgg_net((32, 64), batch_norm=False),
+        "vgg-s-bn": lambda: cnn.vgg_net((32, 64), batch_norm=True),
+        "vgg-m": lambda: cnn.vgg_net((32, 64, 128), batch_norm=False),
+        "vgg-m-bn": lambda: cnn.vgg_net((32, 64, 128), batch_norm=True),
+    }
+
+
+def run_cnns(batch=8, hw=32, out_csv="results/bench/table2_cnn.csv"):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for name, ctor in cnn_zoo().items():
+        graph, params = ctor()
+        in_ch = 32 if name.startswith("blocknet") else 3
+        x = jax.random.normal(key, (batch, hw, hw, in_ch), jnp.float32)
+        total, opt, stacks = analyzer.count_optimizable(graph)
+        nets = {m: api.optimize_graph(graph, x.shape,
+                                      api.OptimizeConfig(mode=m))
+                for m in ("barrier", "xla")}
+        t = {m: common.time_fn(jax.jit(lambda xx, pp, net=net: net(xx, pp)),
+                               x, params)
+             for m, net in nets.items()}
+        traffic = cnn_schedule_traffic(nets["xla"], params)
+        row = dict(network=name, ops=total, optimizable=opt, stacks=stacks,
+                   opt_pct=100.0 * opt / total,
+                   t_barrier_ms=t["barrier"] * 1e3,
+                   t_fused_ms=t["xla"] * 1e3,
+                   wall_speedup_pct=100.0 * (t["barrier"] / t["xla"] - 1.0),
+                   opt_traffic_ratio=traffic["opt_ratio"],
+                   pct_of_total=traffic["pct_of_total"],
+                   total_speedup_pct=traffic["total_speedup_pct"])
+        rows.append(row)
+        print(f"[table2-cnn] {name:12s} ops={total:3d} opt={opt:3d} "
+              f"stacks={stacks:2d} opt_ratio={traffic['opt_ratio']:.2f}x "
+              f"pct_of_total={traffic['pct_of_total']:5.1f}% "
+              f"total={traffic['total_speedup_pct']:+6.1f}%", flush=True)
+    common.write_csv(out_csv, list(rows[0]), [list(r.values()) for r in rows])
+    return rows
+
+
+def lm_stack_census(cfg) -> tuple[int, int]:
+    """(#brainslug-stack applications, #sub-layers) per forward, from the
+    layer plan: each sub-block contributes its norm/act/residual chains."""
+    plan = lm.layer_plan(cfg)
+    per_super = 0
+    for kind in plan.superblock:
+        per_super += 2 if kind == "mamba" else 3   # addnorm(+gate) / 2x addnorm + glu
+    stacks = plan.n_super * per_super + len(plan.tail) * 2 + 1  # final norm
+    return stacks, cfg.n_layers
+
+
+def lm_block_traffic(cfg, tokens: int = 4096, itemsize: int = 2) -> dict:
+    """Analytic per-layer HBM traffic under both schedules (full config,
+    itemsize = bf16).  Optimizable part = the block's BrainSlug stacks
+    (residual+norm chains, GLU gate, mamba gated-norm); the rest (matmul
+    weight reads + matmul-side activation IO, schedule-invariant) is
+    modeled as per-layer active-param bytes + one read/write of each stack
+    boundary.  Columns mirror the paper's Table 2."""
+    from repro.core import collapse as collapse_mod
+    from repro.core import resource
+    from repro.layers import stacks as stacks_mod
+
+    d = cfg.d_model
+    t = tokens
+    programs: list[tuple] = []
+    plan = lm.layer_plan(cfg)
+    kinds = list(plan.superblock)
+    n_units = len(kinds)
+    for kind in kinds:
+        if kind == "mamba":
+            programs.append((stacks_mod.addnorm_program(cfg.norm, 1e-6,
+                                                        False),
+                             {"x": (t, d), "res": (t, d)}))
+            from repro.layers.mamba2 import _gated_norm_program
+            di = cfg.d_inner
+            programs.append((_gated_norm_program(1e-6),
+                             {"y": (t, di), "z": (t, di)}))
+        else:
+            has_bias = cfg.norm == "layer"
+            for _ in range(2):
+                programs.append((stacks_mod.addnorm_program(
+                    cfg.norm, 1e-6, has_bias), {"x": (t, d), "res": (t, d)}))
+            f = cfg.d_ff if kind != "attn_moe" or not cfg.n_experts \
+                else cfg.d_ff * cfg.top_k
+            from repro.layers.dense import is_gated
+            if is_gated(cfg):
+                programs.append((stacks_mod.glu_program(cfg.act),
+                                 {"gate": (t, max(f, 1)),
+                                  "up": (t, max(f, 1))}))
+            else:
+                programs.append((stacks_mod.act_program(cfg.act),
+                                 {"x": (t, max(f, 1))}))
+
+    stack_bf = stack_df = 0
+    for prog, shapes in programs:
+        cplan = collapse_mod.collapse(prog, shapes, resource.TPU_V5E,
+                                      itemsize=itemsize)
+        stack_bf += resource.breadth_first_traffic(prog, shapes, itemsize)
+        stack_df += resource.depth_first_traffic(cplan, shapes, itemsize)
+
+    embed_params = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    layer_params = max(cfg.n_active_params() - embed_params, 0) \
+        / cfg.n_layers * n_units
+    rest = layer_params * itemsize + stack_df
+    total_bf = stack_bf + rest
+    total_df = stack_df + rest
+    return {
+        "opt_ratio": stack_bf / max(stack_df, 1),
+        "pct_of_total": 100.0 * stack_bf / total_bf,
+        "total_speedup_pct": 100.0 * (total_bf / total_df - 1.0),
+    }
+
+
+def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv"):
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch).reduced()
+        shape = ShapeConfig("bench", seq, steps_batch, "train")
+        batch = {k: jnp.asarray(v) for k, v in
+                 data_mod.synth_batch(cfg, shape, 0).items()}
+        params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+        t, b = {}, {}
+        for mode in ("barrier", "xla"):
+            rt = RuntimeConfig(mode=mode)
+            fn = jax.jit(lambda p, bb, rt=rt: lm.loss_fn(p, bb, cfg, rt)[0])
+            t[mode] = common.time_fn(fn, params, batch)
+            b[mode] = common.hlo_cost(
+                lambda p, bb, rt=rt: lm.loss_fn(p, bb, cfg, rt)[0],
+                params, batch)["bytes"]
+        stacks, layers = lm_stack_census(cfg)
+        traffic = lm_block_traffic(get_config(arch))
+        row = dict(arch=arch, layers=layers, stacks=stacks,
+                   t_barrier_ms=t["barrier"] * 1e3,
+                   t_fused_ms=t["xla"] * 1e3,
+                   wall_speedup_pct=100.0 * (t["barrier"] / t["xla"] - 1.0),
+                   opt_traffic_ratio=traffic["opt_ratio"],
+                   pct_of_total=traffic["pct_of_total"],
+                   total_speedup_pct=traffic["total_speedup_pct"])
+        rows.append(row)
+        print(f"[table2-lm] {arch:26s} stacks={stacks:4d} "
+              f"opt_ratio={traffic['opt_ratio']:.2f}x "
+              f"pct_of_total={traffic['pct_of_total']:5.1f}% "
+              f"total={traffic['total_speedup_pct']:+6.1f}%", flush=True)
+    common.write_csv(out_csv, list(rows[0]), [list(r.values()) for r in rows])
+    return rows
+
+
+if __name__ == "__main__":
+    run_cnns()
+    run_lms()

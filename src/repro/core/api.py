@@ -1,0 +1,119 @@
+"""Public BrainSlug API — the paper's ``brainslug.optimize(model)``.
+
+Two entry points:
+
+* :func:`optimize_graph` — the transparent whole-network path (CNN family):
+  takes a :class:`~repro.core.ir.NetGraph`, finds optimizable runs, collapses
+  them against the device budget, and returns an :class:`OptimizedNet` whose
+  ``__call__`` executes opaque ops breadth-first and collapsed stacks
+  depth-first.
+* :func:`optimize_stack` — the composable path used by the LM layers: takes a
+  single :class:`~repro.core.ir.StackProgram` (a block's norm/act/residual
+  chain) and returns a fused executor.  Model code stays declarative; the
+  execution mode is a config knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax.numpy as jnp
+
+from repro.core import analyzer, codegen, collapse, ir, resource
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizeConfig:
+    mode: str = "xla"            # 'brainslug' | 'xla' | 'barrier'
+    device: resource.DeviceSpec = resource.TPU_V5E
+    interpret: bool = True       # Pallas interpret mode (CPU validation)
+    itemsize: int = 4
+    max_steps_per_sequence: int | None = None
+
+
+@dataclasses.dataclass
+class OptimizedNet:
+    """A rewritten network: opaque segments + compiled stacks (the paper's
+    special BrainSlug layers standing in for the collapsed originals)."""
+
+    graph: ir.NetGraph
+    segments: list
+    executors: dict[int, codegen.Executor]
+    plans: dict[int, collapse.CollapsePlan]
+    config: OptimizeConfig
+    shapes: dict[str, tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)   # value name -> inferred shape
+
+    def __call__(self, x: jnp.ndarray,
+                 params: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        env = {self.graph.input: x}
+        for idx, seg in enumerate(self.segments):
+            if seg.is_stack:
+                out = self.executors[idx](
+                    {k: env[k] for k in seg.stack.inputs}, params)
+                env.update(out)
+            else:
+                env[seg.op.output] = ir.apply_op(seg.op, env, params)
+        return env[self.graph.output]
+
+    @property
+    def n_stacks(self) -> int:
+        return len(self.executors)
+
+    @property
+    def n_sequences(self) -> int:
+        return sum(len(p.sequences) for p in self.plans.values())
+
+
+def optimize_graph(graph: ir.NetGraph,
+                   input_shape: tuple[int, ...],
+                   config: OptimizeConfig = OptimizeConfig(),
+                   layout: str = "nhwc") -> OptimizedNet:
+    segments = analyzer.analyze(graph, layout=layout)
+    executors: dict[int, codegen.Executor] = {}
+    plans: dict[int, collapse.CollapsePlan] = {}
+    shapes: dict[str, tuple[int, ...]] = {graph.input: input_shape}
+    for idx, seg in enumerate(segments):
+        if seg.is_stack:
+            in_shapes = {v: shapes[v] for v in seg.stack.inputs}
+            plan = collapse.collapse(
+                seg.stack, in_shapes, config.device,
+                itemsize=config.itemsize,
+                max_steps_per_sequence=config.max_steps_per_sequence)
+            plans[idx] = plan
+            executors[idx] = codegen.compile_plan(
+                plan, mode=config.mode, interpret=config.interpret)
+            shapes.update(ir.infer_shapes(seg.stack, in_shapes))
+        else:
+            _infer_opaque_shape(seg.op, shapes)
+    return OptimizedNet(graph=graph, segments=segments, executors=executors,
+                        plans=plans, config=config, shapes=shapes)
+
+
+def optimize_stack(program: ir.StackProgram,
+                   input_shapes: Mapping[str, tuple[int, ...]],
+                   config: OptimizeConfig = OptimizeConfig()
+                   ) -> codegen.Executor:
+    plan = collapse.collapse(
+        program, input_shapes, config.device, itemsize=config.itemsize,
+        max_steps_per_sequence=config.max_steps_per_sequence)
+    return codegen.compile_plan(plan, mode=config.mode,
+                                interpret=config.interpret)
+
+
+def _infer_opaque_shape(op: ir.OpNode, shapes: dict) -> None:
+    """Shape propagation for the opaque kinds appearing in NetGraphs."""
+    if op.kind == ir.OpKind.CONV2D:
+        n, h, w, _ = shapes[op.inputs[0]]
+        kh, kw, _, co = op.attrs["kernel_shape"]
+        sh, sw = op.attrs.get("stride", (1, 1))
+        ph, pw = op.attrs.get("padding", (0, 0))
+        shapes[op.output] = (n, ir.pool_out_extent(h, kh, sh, ph),
+                             ir.pool_out_extent(w, kw, sw, pw), co)
+    elif op.kind == ir.OpKind.MATMUL:
+        shp = shapes[op.inputs[0]]
+        shapes[op.output] = shp[:-1] + (op.attrs["features_out"],)
+    elif op.kind == ir.OpKind.OPAQUE and "out_shape" in op.attrs:
+        shapes[op.output] = tuple(op.attrs["out_shape"])
+    else:
+        shapes[op.output] = shapes[op.inputs[0]]

@@ -1,0 +1,200 @@
+"""The Collapser — paper compile-phase steps 3-4 (Listing 1).
+
+Maps a stack's operations onto **Steps** (at most one non-element-wise op
+per step: a non-element-wise op is a synchronization point because its
+outputs depend on many inputs) and packs steps into **Sequences** subject to
+the device resource model (VMEM budget).  Each sequence becomes one fused
+depth-first kernel; sequences within a stack execute serially through a
+materialized intermediate (paper §4.2: "If there is more than one sequence
+in a stack the sequences are executed in a serialized fashion").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from repro.core import ir, resource
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    ops: tuple[ir.OpNode, ...]
+
+    @property
+    def only_elementwise(self) -> bool:
+        return all(op.is_elementwise for op in self.ops)
+
+
+@dataclasses.dataclass(frozen=True)
+class SequencePlan:
+    """One fused kernel: consecutive steps whose double-buffered working set
+    fits the device budget."""
+
+    steps: tuple[Step, ...]
+    # rows layout: chosen row-tile extent.  nhwc: output patch extents.
+    tile_rows: int = 0
+    tile_out_h: int = 0
+    tile_out_w: int = 0
+
+    @property
+    def ops(self) -> tuple[ir.OpNode, ...]:
+        return tuple(op for s in self.steps for op in s.ops)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollapsePlan:
+    """Result of collapsing one StackProgram."""
+
+    program: ir.StackProgram
+    sequences: tuple[SequencePlan, ...]
+    device: resource.DeviceSpec
+
+    def subprogram(self, i: int) -> ir.StackProgram:
+        """Materialize sequence ``i`` as a standalone StackProgram (its
+        inputs are the stack inputs still live plus the previous sequence's
+        boundary value)."""
+        seq_ops = self.sequences[i].ops
+        defined_before: set[str] = set(self.program.inputs)
+        for s in self.sequences[:i]:
+            defined_before.update(op.output for op in s.ops)
+        defined_in = {op.output for op in seq_ops}
+        ins: list[str] = []
+        for op in seq_ops:
+            for v in op.inputs:
+                if v not in defined_in and v not in ins:
+                    ins.append(v)
+        # outputs: tail + anything later sequences / stack outputs need
+        needed_later: set[str] = set(self.program.outputs)
+        for s in self.sequences[i + 1:]:
+            for op in s.ops:
+                needed_later.update(op.inputs)
+        outs = [op.output for op in seq_ops if op.output in needed_later]
+        if not outs:
+            outs = [seq_ops[-1].output]
+        return ir.StackProgram(
+            name=f"{self.program.name}_seq{i}", inputs=tuple(ins),
+            outputs=tuple(outs), ops=seq_ops, layout=self.program.layout)
+
+
+def build_steps(program: ir.StackProgram) -> list[Step]:
+    """Group ops into steps (Listing 1 part 3): element-wise ops always join
+    the current step; a non-element-wise op joins only if the step has none
+    yet, otherwise it opens a new step."""
+    steps: list[list[ir.OpNode]] = []
+    cur: list[ir.OpNode] = []
+    cur_has_nonew = False
+    for op in program.ops:
+        if op.is_elementwise:
+            cur.append(op)
+        elif not cur_has_nonew:
+            cur.append(op)
+            cur_has_nonew = True
+        else:
+            steps.append(cur)
+            cur = [op]
+            cur_has_nonew = True
+    if cur:
+        steps.append(cur)
+    return [Step(ops=tuple(s)) for s in steps]
+
+
+def collapse(program: ir.StackProgram,
+             input_shapes: Mapping[str, tuple[int, ...]],
+             device: resource.DeviceSpec = resource.TPU_V5E,
+             *,
+             itemsize: int = 2,
+             max_steps_per_sequence: int | None = None) -> CollapsePlan:
+    """Collapse ``program`` into sequences sized for ``device``.
+
+    ``max_steps_per_sequence`` reproduces the paper's Fig. 10 strategy knob
+    (1 step / 5 steps / unrestricted).
+    """
+    steps = build_steps(program)
+    if program.layout == "rows":
+        seqs = _pack_rows(program, steps, input_shapes, device, itemsize,
+                          max_steps_per_sequence)
+    else:
+        seqs = _pack_nhwc(program, steps, input_shapes, device, itemsize,
+                          max_steps_per_sequence)
+    return CollapsePlan(program=program, sequences=tuple(seqs), device=device)
+
+
+def _pack_rows(program: ir.StackProgram, steps: list[Step],
+               input_shapes: Mapping[str, tuple[int, ...]],
+               device: resource.DeviceSpec, itemsize: int,
+               max_steps: int | None) -> list[SequencePlan]:
+    """rows layout: norms are row-local, so the working set never grows with
+    stacking — one sequence almost always suffices; the row-tile extent is
+    chosen to fill the budget."""
+    features = max((input_shapes[v][-1] if v in input_shapes else 0)
+                   for v in program.inputs)
+    seqs: list[SequencePlan] = []
+    pending: list[Step] = []
+
+    def flush() -> None:
+        nonlocal pending
+        if not pending:
+            return
+        sub_ops = tuple(op for s in pending for op in s.ops)
+        sub = dataclasses.replace(program, ops=sub_ops)
+        rows = resource.pick_row_tile(sub, features, itemsize, device)
+        seqs.append(SequencePlan(steps=tuple(pending), tile_rows=rows))
+        pending = []
+
+    for step in steps:
+        pending.append(step)
+        sub_ops = tuple(op for s in pending for op in s.ops)
+        sub = dataclasses.replace(program, ops=sub_ops)
+        too_big = resource.rows_tile_bytes(
+            resource.max_live_values(sub), device.sublane, features, itemsize,
+            device) > device.resource_limit
+        over_steps = max_steps is not None and len(pending) > max_steps
+        if too_big or over_steps:
+            pending.pop()
+            flush()
+            pending = [step]
+    flush()
+    return seqs
+
+
+def _pack_nhwc(program: ir.StackProgram, steps: list[Step],
+               input_shapes: Mapping[str, tuple[int, ...]],
+               device: resource.DeviceSpec, itemsize: int,
+               max_steps: int | None) -> list[SequencePlan]:
+    """nhwc layout (Listing 1 part 4, faithful): iterate over steps, keep a
+    candidate sequence, and when its receptive-field-grown working set
+    exceeds the limit, close the sequence and start a new one.  The output
+    patch extent adapts downward if even a single step overflows the budget
+    (paper: tile geometry is chosen against the device's resource limit)."""
+    shape = next(iter(input_shapes.values()))
+    channels = shape[-1]
+    out_h = out_w = 8          # output patch per grid cell (tunable)
+    while out_h > 1 and not all(
+            resource.fits([s.ops], out_h, out_w, channels, itemsize, device)
+            for s in steps):
+        out_h //= 2
+        out_w //= 2
+    if not all(resource.fits([s.ops], out_h, out_w, channels, itemsize,
+                             device) for s in steps):
+        raise resource.ResourceError(
+            f"{program.name}: single step exceeds device budget at 1x1 tile")
+
+    seqs: list[SequencePlan] = []
+    pending: list[Step] = []
+    for step in steps:
+        pending.append(step)
+        over_steps = max_steps is not None and len(pending) > max_steps
+        if over_steps or not resource.fits(
+                [s.ops for s in pending], out_h, out_w, channels, itemsize,
+                device):
+            pending.pop()                      # sequence.remove(step)
+            if not pending:
+                raise resource.ResourceError(
+                    f"{program.name}: single step exceeds device budget")
+            seqs.append(SequencePlan(steps=tuple(pending),
+                                     tile_out_h=out_h, tile_out_w=out_w))
+            pending = [step]
+    if pending:
+        seqs.append(SequencePlan(steps=tuple(pending),
+                                 tile_out_h=out_h, tile_out_w=out_w))
+    return seqs

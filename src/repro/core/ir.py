@@ -1,0 +1,362 @@
+"""BrainSlug op-level IR.
+
+The paper's front-ends parse a framework network into a common abstraction
+(the *stack*).  Our IR is a light SSA program: a ``StackProgram`` is an
+ordered list of :class:`OpNode` over named values.  Programs come in two
+layouts:
+
+* ``rows``  — tensors are ``(..., features)``; every op is element-wise or
+  row-local (reductions only over the trailing feature axis).  This is the
+  layout of all LM-block chains (residual add, RMSNorm, SwiGLU, bias, RoPE).
+* ``nhwc``  — tensors are ``(N, H, W, C)``; pooling ops consume spatial
+  neighborhoods.  This is the paper's own CNN domain.
+
+A single interpreter (:func:`run_program`) executes programs on jnp arrays.
+It is reused in three contexts: the XLA-fusion path (jit of the interpreter),
+the barrier path (per-op ``optimization_barrier``), and *inside the generated
+Pallas kernel body* (the kernel traces the same interpreter over VMEM tiles).
+That reuse is what makes the generated kernels trustworthy: one semantics,
+three schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class OpKind(enum.Enum):
+    # ---- optimizable (BrainSlug-collapsible) ----------------------------
+    EW_UNARY = "ew_unary"        # y = f(x)
+    EW_BINARY = "ew_binary"      # y = f(a, b)   (b may be a param or a value)
+    AFFINE = "affine"            # y = x * scale + bias    (feature-wise)
+    ROW_NORM = "row_norm"        # rmsnorm / layernorm over trailing axis
+    ROW_SOFTMAX = "row_softmax"  # softmax over trailing axis (router, attn probs)
+    POOL2D = "pool2d"            # max / avg spatial pooling   (nhwc layout)
+    # ---- non-optimizable (left to XLA / dedicated kernels) --------------
+    MATMUL = "matmul"
+    CONV2D = "conv2d"
+    ATTENTION = "attention"
+    SSD = "ssd"
+    EMBED = "embed"
+    OPAQUE = "opaque"            # anything else (kept as a black box)
+
+
+#: OpKinds BrainSlug's analyzer will pull into a stack (paper step 1).
+OPTIMIZABLE_KINDS = frozenset({
+    OpKind.EW_UNARY, OpKind.EW_BINARY, OpKind.AFFINE, OpKind.ROW_NORM,
+    OpKind.ROW_SOFTMAX, OpKind.POOL2D,
+})
+
+#: OpKinds that are *element-wise* in the paper's sense (no cross-element
+#: dependency).  Everything optimizable-but-not-element-wise forces a new
+#: step (paper §4.1 collapse process).
+ELEMENTWISE_KINDS = frozenset({OpKind.EW_UNARY, OpKind.EW_BINARY, OpKind.AFFINE})
+
+
+_UNARY_FNS: dict[str, Callable[[jnp.ndarray], jnp.ndarray]] = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
+    "squared_relu": lambda x: jnp.square(jnp.maximum(x, 0.0)),
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "gelu_exact": lambda x: jax.nn.gelu(x, approximate=False),
+    "silu": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "exp": jnp.exp,
+    "abs": jnp.abs,
+    "square": jnp.square,
+    "identity": lambda x: x,
+    "neg": lambda x: -x,
+    "softplus": jax.nn.softplus,
+}
+
+_BINARY_FNS: dict[str, Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]] = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": jnp.divide,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpNode:
+    """One operation in a stack program (SSA form)."""
+
+    kind: OpKind
+    name: str                       # unique within the program
+    inputs: tuple[str, ...]         # value names consumed
+    output: str                     # value name produced
+    fn: str | None = None           # for EW_UNARY / EW_BINARY / POOL2D ('max'|'avg')
+    params: tuple[str, ...] = ()    # parameter names consumed (broadcast over rows)
+    attrs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- paper layer taxonomy ---------------------------------------------
+    @property
+    def is_optimizable(self) -> bool:
+        return self.kind in OPTIMIZABLE_KINDS
+
+    @property
+    def is_elementwise(self) -> bool:
+        return self.kind in ELEMENTWISE_KINDS
+
+    def validate(self) -> None:
+        if self.kind == OpKind.EW_UNARY and self.fn not in _UNARY_FNS:
+            raise ValueError(f"unknown unary fn {self.fn!r} in op {self.name!r}")
+        if self.kind == OpKind.EW_BINARY and self.fn not in _BINARY_FNS:
+            raise ValueError(f"unknown binary fn {self.fn!r} in op {self.name!r}")
+        if self.kind == OpKind.POOL2D:
+            if self.fn not in ("max", "avg"):
+                raise ValueError(f"pool2d fn must be max|avg, got {self.fn!r}")
+            for key in ("window", "stride", "padding"):
+                if key not in self.attrs:
+                    raise ValueError(f"pool2d op {self.name!r} missing attr {key!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StackProgram:
+    """A chain of optimizable ops — the paper's *stack* abstraction.
+
+    ``inputs`` are the externally supplied value names (activations and saved
+    residuals); ``params`` the parameter names; ``outputs`` the values that
+    escape the stack.  ``layout`` selects the resource/codegen model.
+    """
+
+    name: str
+    inputs: tuple[str, ...]
+    outputs: tuple[str, ...]
+    ops: tuple[OpNode, ...]
+    layout: str = "rows"            # 'rows' | 'nhwc'
+
+    def __post_init__(self) -> None:
+        if self.layout not in ("rows", "nhwc"):
+            raise ValueError(f"bad layout {self.layout!r}")
+        defined = set(self.inputs)
+        for op in self.ops:
+            op.validate()
+            for v in op.inputs:
+                if v not in defined:
+                    raise ValueError(
+                        f"{self.name}: op {op.name!r} reads undefined value {v!r}")
+            if op.output in defined:
+                raise ValueError(f"{self.name}: value {op.output!r} redefined")
+            defined.add(op.output)
+        for v in self.outputs:
+            if v not in defined:
+                raise ValueError(f"{self.name}: output {v!r} never defined")
+
+    @property
+    def param_names(self) -> tuple[str, ...]:
+        seen: list[str] = []
+        for op in self.ops:
+            for p in op.params:
+                if p not in seen:
+                    seen.append(p)
+        return tuple(seen)
+
+    def signature(self) -> tuple:
+        """Structural hash key — the paper reuses generated code across
+        identical stacks ("If there are multiple equivalent stacks, BRAINSLUG
+        only generates the code once")."""
+        return (
+            self.layout, self.inputs, self.outputs,
+            tuple((o.kind.value, o.fn, o.inputs, o.output, o.params,
+                   tuple(sorted((k, _freeze(v)) for k, v in o.attrs.items())))
+                  for o in self.ops),
+        )
+
+
+def _freeze(v: Any) -> Any:
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Graph-level IR (paper front-end output): an ordered network of ops, some
+# optimizable and some opaque.  Used by the CNN models; LM blocks register
+# StackPrograms directly.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NetGraph:
+    """A (linear) network DAG.  The assigned CNN/LM families are sequential
+    at the granularity BrainSlug cares about; residual edges are expressed as
+    saved-value inputs to EW_BINARY adds, which keeps the graph linear while
+    preserving the true dependency structure (paper Fig. 4/5)."""
+
+    name: str
+    input: str
+    output: str
+    ops: tuple[OpNode, ...]
+
+    def __post_init__(self) -> None:
+        defined = {self.input}
+        for op in self.ops:
+            for v in op.inputs:
+                if v not in defined:
+                    raise ValueError(
+                        f"{self.name}: op {op.name!r} reads undefined value {v!r}")
+            defined.add(op.output)
+        if self.output not in defined:
+            raise ValueError(f"{self.name}: output {self.output!r} never defined")
+
+
+# ---------------------------------------------------------------------------
+# Interpreter — the single source of op semantics.
+# ---------------------------------------------------------------------------
+
+def apply_op(op: OpNode, env: dict[str, jnp.ndarray],
+             params: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+    """Execute one op given an environment of named values."""
+    ins = [env[v] for v in op.inputs]
+    ps = [params[p] for p in op.params]
+
+    if op.kind == OpKind.EW_UNARY:
+        return _UNARY_FNS[op.fn](ins[0])
+
+    if op.kind == OpKind.EW_BINARY:
+        if ps:                                  # param operand (bias / scale)
+            other = ps[0]
+        else:
+            other = ins[1]
+        return _BINARY_FNS[op.fn](ins[0], other)
+
+    if op.kind == OpKind.AFFINE:                # batchnorm-inference & friends
+        scale, bias = ps
+        return ins[0] * scale + bias
+
+    if op.kind == OpKind.ROW_NORM:
+        x = ins[0]
+        eps = op.attrs.get("eps", 1e-6)
+        kind = op.attrs.get("norm", "rms")
+        if kind == "rms":
+            var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+            y = (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+        elif kind == "layer":
+            xf = x.astype(jnp.float32)
+            mu = jnp.mean(xf, axis=-1, keepdims=True)
+            var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+            y = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+        else:
+            raise ValueError(f"unknown norm kind {kind!r}")
+        if ps:                                   # optional scale (+ bias)
+            y = y * ps[0]
+            if len(ps) > 1:
+                y = y + ps[1]
+        return y
+
+    if op.kind == OpKind.ROW_SOFTMAX:
+        return jax.nn.softmax(ins[0], axis=-1)
+
+    if op.kind == OpKind.POOL2D:
+        return _pool2d(ins[0], op)
+
+    # ---- opaque (non-optimizable) kinds: executed breadth-first ----------
+    if op.kind == OpKind.MATMUL:
+        w = ps[0]
+        x = ins[0]
+        y = jnp.einsum("...i,io->...o", x, w)
+        if len(ps) > 1:
+            y = y + ps[1]
+        return y
+
+    if op.kind == OpKind.CONV2D:
+        w = ps[0]                                   # HWIO
+        sh, sw = op.attrs.get("stride", (1, 1))
+        ph, pw = op.attrs.get("padding", (0, 0))
+        y = jax.lax.conv_general_dilated(
+            ins[0], w, window_strides=(sh, sw),
+            padding=((ph, ph), (pw, pw)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if len(ps) > 1:
+            y = y + ps[1]
+        return y
+
+    if op.kind == OpKind.EMBED:
+        return ps[0][ins[0]]
+
+    if op.kind == OpKind.OPAQUE and "fn" in op.attrs:
+        return op.attrs["fn"](*ins, *ps)
+
+    raise NotImplementedError(f"apply_op cannot execute kind {op.kind}")
+
+
+def _pool2d(x: jnp.ndarray, op: OpNode) -> jnp.ndarray:
+    """NHWC max/avg pooling with explicit padding (paper layer type 2)."""
+    kh, kw = op.attrs["window"]
+    sh, sw = op.attrs["stride"]
+    ph, pw = op.attrs["padding"]
+    dims = (1, kh, kw, 1)
+    strides = (1, sh, sw, 1)
+    pads = ((0, 0), (ph, ph), (pw, pw), (0, 0))
+    if op.fn == "max":
+        init = -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min
+        return jax.lax.reduce_window(x, init, jax.lax.max, dims, strides, pads)
+    # avg: count includes padding exactly like PyTorch's count_include_pad=True
+    summed = jax.lax.reduce_window(x, 0.0, jax.lax.add, dims, strides, pads)
+    return summed / float(kh * kw)
+
+
+def run_program(program: StackProgram,
+                env: Mapping[str, jnp.ndarray],
+                params: Mapping[str, jnp.ndarray],
+                *,
+                barrier: bool = False) -> dict[str, jnp.ndarray]:
+    """Interpret ``program``.  With ``barrier=True`` an
+    ``optimization_barrier`` is inserted after every op — this reproduces the
+    paper's breadth-first baseline (each layer's output is materialized, XLA
+    may not fuse across layers)."""
+    env = dict(env)
+    for op in program.ops:
+        out = apply_op(op, env, params)
+        if barrier:
+            out = jax.lax.optimization_barrier(out)
+        env[op.output] = out
+    return {v: env[v] for v in program.outputs}
+
+
+# ---------------------------------------------------------------------------
+# Shape inference (resource model + dry-run support).
+# ---------------------------------------------------------------------------
+
+def pool_out_extent(extent: int, k: int, s: int, p: int) -> int:
+    return (extent + 2 * p - k) // s + 1
+
+
+def pool_in_extent(out_extent: int, k: int, s: int) -> int:
+    """Input extent a depth-first tile needs to produce ``out_extent``
+    outputs (receptive-field growth; the source of the paper's Fig. 10
+    cache-overflow artifact)."""
+    return (out_extent - 1) * s + k
+
+
+def infer_shapes(program: StackProgram,
+                 input_shapes: Mapping[str, tuple[int, ...]]
+                 ) -> dict[str, tuple[int, ...]]:
+    """Propagate shapes through a program (params assumed broadcastable)."""
+    shapes: dict[str, tuple[int, ...]] = dict(input_shapes)
+    for op in program.ops:
+        if op.kind == OpKind.POOL2D:
+            n, h, w, c = shapes[op.inputs[0]]
+            kh, kw = op.attrs["window"]
+            sh, sw = op.attrs["stride"]
+            ph, pw = op.attrs["padding"]
+            shapes[op.output] = (n, pool_out_extent(h, kh, sh, ph),
+                                 pool_out_extent(w, kw, sw, pw), c)
+        elif op.kind == OpKind.EW_BINARY and not op.params:
+            a, b = shapes[op.inputs[0]], shapes[op.inputs[1]]
+            shapes[op.output] = tuple(
+                max(x, y) for x, y in zip((1,) * (len(b) - len(a)) + tuple(a),
+                                          (1,) * (len(a) - len(b)) + tuple(b)))
+        else:
+            shapes[op.output] = shapes[op.inputs[0]]
+    return shapes

@@ -1,0 +1,254 @@
+"""BrainSlug resource model, adapted to the TPU memory hierarchy.
+
+The paper sizes depth-first tiles against the fastest shared memory level
+(16 kB of GPU shared memory; CPU L1).  On TPU the corresponding level is
+VMEM (~16 MiB per core on v5e).  The *structure* of the model is identical:
+
+    resource consumption of a sequence of steps
+        = the data each step needs, for the tile geometry,
+          double-buffered between steps,
+        and it must fit the device budget
+          (paper: ``sequence.resourceConsumption() > device.resourceLimit()``).
+
+The one genuinely TPU-specific ingredient is tile alignment: the VPU operates
+on (8, 128) vregs and the MXU on 128x128 tiles, so row tiles keep the full
+feature dimension (rounded up to a lane multiple) and tile the row dimension
+in sublane multiples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping
+
+from repro.core import ir
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """Back-end hardware description (paper: back-ends report device specs
+    to the optimizer)."""
+
+    name: str = "tpu_v5e"
+    # VMEM per core.  We deliberately budget a *slice* of it for stack
+    # buffers, mirroring the paper's decision to cap shared-memory usage at
+    # 16 kB out of 64-96 kB available ("reduces the amount of blocks that can
+    # be scheduled ... less opportunities to employ latency hiding").  On TPU
+    # the same pressure exists: Mosaic needs VMEM headroom for pipelining
+    # (double-buffered input/output windows).
+    vmem_bytes: int = 16 * 1024 * 1024
+    vmem_budget_fraction: float = 0.25
+    lane: int = 128                 # trailing-dim vector width
+    sublane: int = 8                # second-minor vector width
+    peak_flops_bf16: float = 197e12     # per chip
+    hbm_bandwidth: float = 819e9        # bytes/s
+    ici_link_bandwidth: float = 50e9    # bytes/s per link
+
+    @property
+    def resource_limit(self) -> int:
+        return int(self.vmem_bytes * self.vmem_budget_fraction)
+
+
+TPU_V5E = DeviceSpec()
+# A deliberately tiny device used by tests to force multi-sequence splits
+# (reproduces the paper's cache-overflow artifact at small scale).
+TINY_DEVICE = DeviceSpec(name="tiny", vmem_bytes=64 * 1024,
+                         vmem_budget_fraction=1.0)
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class TileGeometry:
+    """Geometry of one depth-first tile.
+
+    rows layout:  tile = (rows, features)        — features is the full
+        trailing dim (norms are row-local), rows is the tunable extent.
+    nhwc layout:  tile = (1, out_h, out_w, C)    — one image patch through
+        the whole sequence; ``halo`` input extents grow with stacked pooling.
+    """
+
+    layout: str
+    rows: int = 0
+    features: int = 0
+    out_h: int = 0
+    out_w: int = 0
+    channels: int = 0
+
+
+def step_is_elementwise(ops: tuple[ir.OpNode, ...]) -> bool:
+    return all(o.is_elementwise for o in ops)
+
+
+# ---------------------------------------------------------------------------
+# Working-set accounting.
+# ---------------------------------------------------------------------------
+
+def rows_tile_bytes(n_values: int, rows: int, features: int,
+                    itemsize: int, spec: DeviceSpec) -> int:
+    """Bytes of VMEM needed to hold ``n_values`` live tile buffers."""
+    f = round_up(max(features, 1), spec.lane)
+    r = round_up(max(rows, 1), spec.sublane)
+    return n_values * r * f * itemsize
+
+
+def max_live_values(program: ir.StackProgram) -> int:
+    """Peak number of simultaneously-live values when executing ``program``
+    sequentially (inputs + intermediates with a consumer still pending).
+    This is the rows-layout analogue of the paper's per-step buffer count."""
+    last_use: dict[str, int] = {}
+    for i, op in enumerate(program.ops):
+        for v in op.inputs:
+            last_use[v] = i
+    for v in program.outputs:
+        last_use[v] = len(program.ops)
+    live = set(program.inputs)
+    peak = len(live)
+    for i, op in enumerate(program.ops):
+        live.add(op.output)
+        peak = max(peak, len(live))
+        live = {v for v in live if last_use.get(v, -1) > i}
+    return max(peak, 1)
+
+
+def pick_row_tile(program: ir.StackProgram, features: int, itemsize: int,
+                  spec: DeviceSpec) -> int:
+    """Choose the row-tile extent: the largest sublane multiple such that all
+    live buffers fit the budget (paper: "if the cache size limit is not
+    reached, we increase the size ... to better utilize the given hardware
+    resources")."""
+    n_live = max_live_values(program)
+    budget = spec.resource_limit
+    rows = spec.sublane
+    while True:
+        nxt = rows * 2
+        if rows_tile_bytes(n_live, nxt, features, itemsize, spec) > budget:
+            break
+        if nxt > 4096:                      # diminishing returns past this
+            break
+        rows = nxt
+    if rows_tile_bytes(n_live, rows, features, itemsize, spec) > budget:
+        raise ResourceError(
+            f"{program.name}: even a {spec.sublane}-row tile "
+            f"({rows_tile_bytes(n_live, spec.sublane, features, itemsize, spec)}B "
+            f"for {n_live} buffers) exceeds budget {budget}B on {spec.name}")
+    return rows
+
+
+class ResourceError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# nhwc (pooling) working set: receptive-field growth through stacked steps.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepFootprint:
+    in_h: int
+    in_w: int
+    out_h: int
+    out_w: int
+    channels: int
+    bytes_in: int
+    bytes_out: int
+
+
+def sequence_footprint(steps: list[tuple[ir.OpNode, ...]],
+                       out_h: int, out_w: int, channels: int,
+                       itemsize: int, spec: DeviceSpec) -> list[StepFootprint]:
+    """Walk a candidate sequence of steps *backwards* from the desired output
+    patch, growing the required input extent through every pooling op.  This
+    is exactly the paper's observation that "each block adds new padding, the
+    value increases with each additional block" — overlapping pools inflate
+    the tile working set and eventually overflow the budget (Fig. 10
+    artifact)."""
+    fps: list[StepFootprint] = []
+    h, w = out_h, out_w
+    c = round_up(channels, spec.lane)
+    for step in reversed(steps):
+        sh, sw = h, w
+        for op in reversed(step):
+            if op.kind == ir.OpKind.POOL2D:
+                kh, kw = op.attrs["window"]
+                st_h, st_w = op.attrs["stride"]
+                sh = ir.pool_in_extent(sh, kh, st_h)
+                sw = ir.pool_in_extent(sw, kw, st_w)
+        fps.append(StepFootprint(
+            in_h=sh, in_w=sw, out_h=h, out_w=w, channels=channels,
+            bytes_in=sh * sw * c * itemsize,
+            bytes_out=h * w * c * itemsize))
+        h, w = sh, sw
+    fps.reverse()
+    return fps
+
+
+def sequence_bytes(fps: list[StepFootprint]) -> int:
+    """Peak VMEM of the double-buffered step chain: at any step boundary both
+    the step's input buffer and output buffer are resident (paper: "two
+    buffers allocated in the devices shared memory ... swap the buffers")."""
+    return max(fp.bytes_in + fp.bytes_out for fp in fps)
+
+
+def fits(steps: list[tuple[ir.OpNode, ...]], out_h: int, out_w: int,
+         channels: int, itemsize: int, spec: DeviceSpec) -> bool:
+    fps = sequence_footprint(steps, out_h, out_w, channels, itemsize, spec)
+    return sequence_bytes(fps) <= spec.resource_limit
+
+
+# ---------------------------------------------------------------------------
+# Schedule-level HBM-traffic model (the quantity depth-first execution
+# reduces).  Hardware-independent: counts main-memory reads/writes implied by
+# each schedule, with fast memory (VMEM) holding what the schedule keeps
+# resident.
+# ---------------------------------------------------------------------------
+
+def _nbytes(shape: tuple[int, ...], itemsize: int) -> int:
+    n = itemsize
+    for d in shape:
+        n *= d
+    return n
+
+
+def breadth_first_traffic(program: "ir.StackProgram",
+                          input_shapes: Mapping[str, tuple[int, ...]],
+                          itemsize: int) -> int:
+    """Layer-by-layer execution: every op reads its inputs from and writes
+    its output to main memory (the paper's framework baseline)."""
+    shapes = ir.infer_shapes(program, input_shapes)
+    total = 0
+    for op in program.ops:
+        for v in op.inputs:
+            total += _nbytes(shapes[v], itemsize)
+        total += _nbytes(shapes[op.output], itemsize)
+    return total
+
+
+def depth_first_traffic(plan, input_shapes: Mapping[str, tuple[int, ...]],
+                        itemsize: int) -> int:
+    """Collapsed execution: each sequence reads its external inputs once and
+    writes its boundary outputs once; intra-sequence intermediates live in
+    VMEM.  For nhwc sequences the per-tile halo overlap of stacked pooling
+    is charged as redundant reads (the paper's Fig. 10 overhead)."""
+    program = plan.program
+    shapes = ir.infer_shapes(program, input_shapes)
+    total = 0
+    for i, seq in enumerate(plan.sequences):
+        sub = plan.subprogram(i)
+        if seq.tile_out_h > 0:                       # nhwc: tiled with halo
+            n, oh, ow, c = shapes[sub.outputs[0]]
+            th = min(seq.tile_out_h, oh)
+            tw = min(seq.tile_out_w, ow)
+            nt = -(-oh // th) * (-(-ow // tw))
+            fps = sequence_footprint([s.ops for s in seq.steps], th, tw, c,
+                                     itemsize, TPU_V5E)
+            total += n * nt * fps[0].in_h * fps[0].in_w * c * itemsize
+            total += _nbytes(shapes[sub.outputs[0]], itemsize)
+        else:                                        # rows: exact one-pass
+            for v in sub.inputs:
+                total += _nbytes(shapes[v], itemsize)
+            for v in sub.outputs:
+                total += _nbytes(shapes[v], itemsize)
+    return total

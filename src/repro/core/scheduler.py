@@ -1,0 +1,54 @@
+"""Execution-phase scheduler (paper §4.2).
+
+The paper's scheduler gathers tensors, allocates output buffers, loads the
+compiled kernel object and runs sequences serially.  Under JAX the buffer
+management and kernel loading are owned by the runtime, so the scheduler's
+remaining responsibilities are (a) stack dispatch bookkeeping and (b)
+executing an :class:`~repro.core.api.OptimizedNet` under ``jax.jit`` with
+stable donation/jit caching, plus execution statistics used by the
+benchmarks (stack count, sequence count, per-mode dispatch totals).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+
+
+@dataclasses.dataclass
+class StackStats:
+    n_stacks: int
+    n_sequences: int
+    n_ops_optimized: int
+    n_ops_total: int
+
+    @property
+    def optimizable_fraction(self) -> float:
+        return self.n_ops_optimized / max(self.n_ops_total, 1)
+
+
+class Scheduler:
+    """Runs an OptimizedNet; caches the jitted callable per net identity."""
+
+    def __init__(self, net: api.OptimizedNet):
+        self.net = net
+        self._jitted = jax.jit(lambda x, params: net(x, params))
+        self.dispatch_count = 0
+
+    def __call__(self, x: jnp.ndarray,
+                 params: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        self.dispatch_count += 1
+        return self._jitted(x, params)
+
+    def stats(self) -> StackStats:
+        n_opt = sum(len(s.stack.ops) for s in self.net.segments if s.is_stack)
+        return StackStats(
+            n_stacks=self.net.n_stacks,
+            n_sequences=self.net.n_sequences,
+            n_ops_optimized=n_opt,
+            n_ops_total=len(self.net.graph.ops),
+        )

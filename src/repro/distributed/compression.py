@@ -1,0 +1,77 @@
+"""Gradient compression with error feedback for cross-pod reduction.
+
+At multi-pod scale the pod-crossing links (DCI) are an order of magnitude
+slower than ICI, so the cross-pod stage of the gradient all-reduce is the
+collective-roofline term that grows with pod count.  int8 block-quantized
+compression cuts those bytes 4x (vs f32) / 2x (vs bf16); the error-feedback
+accumulator keeps SGD convergence unbiased (Karimireddy et al., 2019 —
+standard practice, applied here to the hierarchical reduction's slow stage).
+
+Pure functions — the error state lives in the train state and is sharded
+like the gradients themselves.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_len(n: int) -> int:
+    return (-n) % BLOCK
+
+
+def quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-wise symmetric int8 quantization.  Returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = _pad_len(flat.size)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape: tuple[int, ...],
+               dtype) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def init_error_state(grads: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_decompress(grads: Any, err: Any) -> tuple[Any, Any]:
+    """Apply error feedback: quantize (g + e), dequantize, new error =
+    (g + e) - dequantized.  The round trip is what a compressed cross-pod
+    all-reduce sees; wrapping the actual collective around the int8 payload
+    is a launcher concern (shard_map region)."""
+    def leaf(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = quantize(target)
+        deq = dequantize(q, s, g.shape, jnp.float32)
+        return deq.astype(g.dtype), target - deq
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def compressed_bytes(grads: Any) -> int:
+    """Bytes a compressed cross-pod reduction moves (int8 + f32 scales)."""
+    total = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        n = g.size + _pad_len(g.size)
+        total += n + (n // BLOCK) * 4
+    return total

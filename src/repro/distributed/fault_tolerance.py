@@ -1,0 +1,101 @@
+"""Fault tolerance: elastic re-meshing, failure simulation hooks, and
+straggler detection.
+
+The recovery contract at 1000+-node scale:
+
+1. every state mutation goes through atomic checkpoints
+   (``repro.checkpoint``), so "recover" = "restart from latest",
+2. on restart with fewer healthy hosts, :func:`plan_mesh` picks the largest
+   valid (data, model) grid for the survivors, keeping the model axis at the
+   largest size that still satisfies TP divisibility and memory; parameters
+   are resharded by reading the checkpoint under the new mesh (checkpoints
+   store full logical arrays, so resharding is just a different
+   ``NamedSharding`` at restore time),
+3. the :class:`StragglerWatchdog` flags slow steps from an EWMA baseline —
+   the hook a real deployment wires to its scheduler (demote/evict host).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int = 16,
+              min_model_parallel: int = 1, pods: int = 1) -> MeshPlan:
+    """Largest usable (data, model) grid for ``n_devices`` survivors.
+
+    Keeps the requested TP degree if possible, halving it until the device
+    count divides; drops stragglers that don't fit the grid (the unused
+    remainder is left idle — cheaper than a smaller power-of-two grid)."""
+    per_pod = n_devices // pods
+    best: tuple[int, int, int] | None = None    # (used, mp, data)
+    mp = model_parallel
+    while mp >= max(min_model_parallel, 1):
+        data = per_pod // mp
+        if data >= 1:
+            used = data * mp
+            # maximize utilized devices; tie-break toward higher TP
+            if best is None or used > best[0]:
+                best = (used, mp, data)
+        mp //= 2
+    if best is None:
+        raise ValueError(f"cannot build a mesh from {n_devices} devices")
+    _, mp, data = best
+    if pods > 1:
+        return MeshPlan((pods, data, mp), ("pod", "data", "model"))
+    return MeshPlan((data, mp), ("data", "model"))
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by the failure-injection hook in tests/examples."""
+
+
+def failure_injector(fail_at_steps: set[int]):
+    def hook(step: int) -> None:
+        if step in fail_at_steps:
+            fail_at_steps.discard(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+    return hook
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EWMA step-time monitor.  ``check`` returns True when the last step
+    exceeded ``threshold`` x the smoothed baseline (straggler signal)."""
+    alpha: float = 0.1
+    threshold: float = 2.0
+    warmup_steps: int = 5
+    _ewma: float = 0.0
+    _count: int = 0
+    _last_start: float = 0.0
+    slow_steps: int = 0
+
+    def start(self) -> None:
+        self._last_start = time.monotonic()
+
+    def stop(self) -> bool:
+        dt = time.monotonic() - self._last_start
+        self._count += 1
+        if self._count <= self.warmup_steps:
+            self._ewma = dt if self._ewma == 0 else \
+                (1 - self.alpha) * self._ewma + self.alpha * dt
+            return False
+        is_slow = dt > self.threshold * self._ewma
+        if is_slow:
+            self.slow_steps += 1
+        else:
+            self._ewma = (1 - self.alpha) * self._ewma + self.alpha * dt
+        return is_slow

@@ -1,0 +1,173 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Models annotate parameters with logical axes (see ``layers.base``); this
+module turns an axes tree into a ``PartitionSpec`` / ``NamedSharding`` tree
+for a given mesh.  The default rule set:
+
+    heads / kv_heads / ffn / vocab  -> "model"   (tensor parallelism)
+    fsdp                            -> "data"    (ZeRO-3 parameter sharding)
+    experts                         -> "data"    (expert parallelism)
+    layers                          -> None      (scan axis, replicated)
+
+Multi-pod meshes add a leading "pod" axis; by default it extends data
+parallelism (batch sharded over ("pod", "data")), with parameters *not*
+sharded over "pod" (each pod keeps a full FSDP shard set — cross-pod traffic
+is then only gradient all-reduce, which is the right trade at DCI
+bandwidth).  ``fsdp_over_pod=True`` folds "pod" into the FSDP axis instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    tp_axes: tuple[str, ...] = ("heads", "kv_heads", "ffn", "vocab")
+    fsdp: bool = True
+    fsdp_over_pod: bool = False
+    expert_axis: str = "data"
+
+    def mesh_axis_for(self, logical: str | None, mesh: Mesh) -> Any:
+        names = mesh.axis_names
+        if logical is None or logical == "layers":
+            return None
+        if logical in self.tp_axes:
+            return "model" if "model" in names else None
+        if logical == "fsdp":
+            if not self.fsdp:
+                return None
+            if self.fsdp_over_pod and "pod" in names:
+                return ("pod", "data")
+            return "data" if "data" in names else None
+        if logical == "experts":
+            ax = self.expert_axis
+            return ax if ax in names else None
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+
+def spec_for_axes(axes: tuple[str | None, ...], rules: ShardingRules,
+                  mesh: Mesh) -> P:
+    """Build a PartitionSpec, dropping conflicts: a mesh axis may appear at
+    most once per spec (first logical dim wins)."""
+    used: set[str] = set()
+    parts = []
+    for logical in axes:
+        ax = rules.mesh_axis_for(logical, mesh)
+        if ax is None:
+            parts.append(None)
+            continue
+        flat = ax if isinstance(ax, tuple) else (ax,)
+        if any(a in used for a in flat):
+            parts.append(None)
+            continue
+        used.update(flat)
+        parts.append(ax)
+    return P(*parts)
+
+
+def param_specs(axes_tree: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda axes: spec_for_axes(axes, rules, mesh), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x))
+
+
+def param_shardings(axes_tree: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_specs(axes_tree, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def repair_spec(shape: tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide their dim extent.
+
+    Production meshes are fixed (16x16 / 2x16x16) while arch dims come from
+    the literature verbatim (vocab=50280, 40 experts, ...).  Rather than
+    silently padding tensors (which changes numerics at the loss softmax) we
+    replicate the offending dim and keep the rest of the spec — the standard
+    "auto-repair" fallback.  For a tuple entry the divisible prefix is kept.
+    """
+    parts: list = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            parts.append(None)
+            continue
+        flat = entry if isinstance(entry, tuple) else (entry,)
+        kept: list[str] = []
+        extent = 1
+        for a in flat:
+            if dim % (extent * mesh.shape[a]) == 0:
+                kept.append(a)
+                extent *= mesh.shape[a]
+            else:
+                break
+        parts.append(tuple(kept) if len(kept) > 1
+                     else (kept[0] if kept else None))
+    return P(*parts)
+
+
+def repair_specs(shapes_tree: Any, specs_tree: Any, mesh: Mesh) -> Any:
+    """Tree-wise :func:`repair_spec`; ``shapes_tree`` leaves need ``.shape``."""
+    return jax.tree_util.tree_map(
+        lambda x, s: repair_spec(x.shape, s, mesh),
+        shapes_tree, specs_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh) -> Any:
+    """Mesh axes the global batch dim is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def batch_spec(batch: dict, mesh: Mesh) -> dict:
+    """Shard every batch array on its leading (batch) dim."""
+    ax = batch_axes(mesh)
+    return jax.tree_util.tree_map(
+        lambda x: P(ax, *([None] * (x.ndim - 1))), batch)
+
+
+def opt_state_specs(pspecs: Any, mesh: Mesh) -> dict:
+    """AdamW moments shard like their params; count replicated."""
+    return {
+        "mu": pspecs,
+        "nu": pspecs,
+        "count": P(),
+    }
+
+
+def cache_spec(cache: Any, mesh: Mesh) -> Any:
+    """Decode caches: batch dim sharded over data axes; the KV sequence dim
+    over model (flash-decode with sequence-parallel KV: each model shard
+    scores its slice of the cache, the softmax statistics and the (B,H,hd)
+    partial outputs reduce over model — MBs instead of gathering the cache).
+    Cache layouts (see layers):
+      KV k/v   : (layers, B, G, S, hd)  -> (None, data, None, model, None)
+      KV length: (layers, B)            -> (None, data)
+      Mamba conv : (layers, B, cw-1, C) -> (None, data, None, model)
+      Mamba state: (layers, B, H, N, P) -> (None, data, model, None, None)
+    The kv-head dim G is deliberately not model-sharded: assigned archs
+    have G in {1, 8, 32} against a 16-way model axis (non-divisible), and
+    the sequence dim is where decode's memory roofline lives."""
+    ax = batch_axes(mesh)
+
+    model = mesh.shape.get("model", 1) if hasattr(mesh, "shape") else 1
+
+    def leaf_spec(x):
+        if x.ndim == 5:
+            if x.shape[3] >= 1024:               # kv cache (layers,B,G,S,hd)
+                if x.shape[2] % model == 0:      # G divisible: head-sharded
+                    return P(None, ax, "model", None, None)
+                return P(None, ax, None, "model", None)  # else: shard S
+            return P(None, ax, "model", None, None)   # ssm state: shard H
+        if x.ndim == 4:        # mamba conv (layers, B, cw-1, C)
+            return P(None, ax, None, "model")
+        if x.ndim == 2:        # lengths (layers, B)
+            return P(None, ax)
+        return P(*([None] * x.ndim))
+
+    return jax.tree_util.tree_map(leaf_spec, cache)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels.
+
+Layout per kernel family: ``<name>.py`` holds the ``pl.pallas_call`` +
+BlockSpec implementation, ``ops.py``-level wrappers (jit + custom_vjp) live
+next to it, and ``ref.py`` is the pure-jnp oracle tests compare against.
+
+All kernels are written for TPU (VMEM BlockSpec tiling, (8,128) alignment,
+MXU-sized matmul tiles) and validated on CPU via ``interpret=True``.
+"""

@@ -1,0 +1,94 @@
+"""Flash-decode kernel: one new query position against a long KV cache.
+
+The decode step is memory-bound — its roofline is the KV-cache read — so
+the only thing that matters is touching each cache block exactly once.  The
+kernel streams ``(block_k, d)`` cache tiles through VMEM, maintains the
+online softmax state in scratch, and emits the output after the last tile.
+A per-batch ``length`` operand masks the unwritten tail of the cache, so
+one compiled kernel serves every decode position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(scale: float, block_k: int,
+            q_ref, k_ref, v_ref, len_ref, o_ref,
+            m_ref, l_ref, acc_ref) -> None:
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_idx < len_ref[0, 0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 lengths: jnp.ndarray, *, scale: float | None = None,
+                 block_k: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, 1, D); k, v: (B, G, S, D); lengths: (B,) int32."""
+    b, h, one, d = q.shape
+    _, g, s, _ = k.shape
+    rep = h // g
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    block_k = min(block_k, s)
+    pk = (-s) % block_k
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else v
+    lens = lengths.reshape(b, 1).astype(jnp.int32)
+
+    grid = (b, h, (s + pk) // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale, block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, j: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, j, rep=rep: (b_, h_ // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, j, rep=rep: (b_, h_ // rep, j, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, j: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h_, j: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, kp, vp, lens)
+    return out

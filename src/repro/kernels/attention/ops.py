@@ -1,0 +1,41 @@
+"""Differentiable dispatch for the attention kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.attention import decode as decode_mod
+from repro.kernels.attention import flash as flash_mod
+from repro.kernels.attention import ref as ref_mod
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    return flash_mod.flash_attention_fwd(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+
+
+def _fwd(q, k, v, causal, block_q, block_k, interpret):
+    return flash_attention(q, k, v, causal, block_q, block_k, interpret), \
+        (q, k, v)
+
+
+def _bwd(causal, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref_mod.attention_ref(q_, k_, v_, causal=causal),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def flash_decode(q, k, v, lengths, *, block_k: int = 512,
+                 interpret: bool = True):
+    """Inference-only (no vjp needed on the decode path)."""
+    return decode_mod.flash_decode(q, k, v, lengths, block_k=block_k,
+                                   interpret=interpret)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for GQA attention (train fwd + decode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True, scale: float | None = None,
+                  lengths: jnp.ndarray | None = None) -> jnp.ndarray:
+    """q: (B,H,Sq,D); k,v: (B,G,Sk,D); optional per-batch valid lengths.
+
+    GQA is expressed by grouping q heads against their kv head in the
+    einsum ("bgrqd,bgkd->bgrqk") instead of ``jnp.repeat``-ing k/v: the
+    math is identical, but no (H/G)x-expanded copy of the KV tensor is
+    ever materialized — and when H does not divide the model axis the
+    expanded copy also blocks sharding (it ends up fully replicated)."""
+    b, h, sq, d = q.shape
+    g, sk = k.shape[1], k.shape[2]
+    rep = h // g
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, g, rep, sq, d)
+    # native-dtype operands with f32 accumulation: casting a 32k KV cache
+    # to f32 materializes a 2x-sized copy (and adds no precision — the
+    # values are already bf16-rounded)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    k_idx = jnp.arange(sk)[None, None, None, None, :]
+    if lengths is not None:
+        s = jnp.where(k_idx < lengths[:, None, None, None, None], s,
+                      NEG_INF)
+    if causal:
+        q_idx = jnp.arange(sq)[None, None, None, :, None]
+        off = 0 if lengths is not None else sk - sq
+        s = jnp.where(k_idx <= q_idx + off, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # cast the q-side (p) down rather than the cache-side (v) up: p is the
+    # smaller tensor on the decode path where v is the whole KV cache
+    o = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               lengths: jnp.ndarray, *, scale: float | None = None
+               ) -> jnp.ndarray:
+    return attention_ref(q, k, v, causal=False, scale=scale, lengths=lengths)

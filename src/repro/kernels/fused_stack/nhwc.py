@@ -1,0 +1,218 @@
+"""Generated depth-first kernel for nhwc-layout stacks (pooling chains).
+
+This is the faithful TPU port of the paper's collapsed CNN kernel
+(paper Listing 2): a grid cell produces one ``(tile_out_h, tile_out_w, C)``
+output patch by loading the receptive-field-grown input region (halo) into
+VMEM and pushing it through every op of the sequence depth-first.
+
+Halo mechanics
+--------------
+BlockSpec partitions are non-overlapping, but stacked stride-1 pooling needs
+overlapping input regions.  The TPU-idiomatic answer is to keep the input in
+``ANY`` (HBM) memory space and issue an explicit windowed copy per grid cell
+(on hardware: an async DMA; under ``interpret=True``: a dynamic-slice load).
+The wrapper pre-pads the input so window origins are always in-bounds, and
+per-pool *validity masks* — computed from global coordinates with
+``broadcasted_iota`` — replace out-of-image positions with the pool's
+neutral element (−inf for max, 0 for avg), reproducing each pooling layer's
+own padding semantics exactly.  See ``ref.py`` for the oracle.
+
+Pooling inside the kernel is expressed as a static unrolled max/add over
+``window`` shifted strided slices of the VMEM tile — ``reduce_window`` does
+not exist inside Mosaic, shifted slices map onto plain VPU ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import collapse as collapse_mod
+from repro.core import ir
+
+
+@dataclasses.dataclass(frozen=True)
+class _Level:
+    """Static spatial geometry of one value level inside the sequence."""
+    extent_h: int            # tile extent at this level
+    extent_w: int
+    image_h: int             # full (unpadded) image extent at this level
+    image_w: int
+    # origin of the tile at this level = out_patch_origin * prod(strides) - off
+    mul_h: int
+    off_h: int
+    mul_w: int
+    off_w: int
+
+
+def _plan_levels(ops: tuple[ir.OpNode, ...], out_h: int, out_w: int,
+                 image_hw: list[tuple[int, int]]) -> list[_Level]:
+    """Walk backwards from the output patch to compute, per op, the tile
+    extent and origin transform of its *input* level.  Per-level *image*
+    extents come from forward shape inference (``image_hw``, one entry per
+    value level): reconstructing them backwards via pool_in_extent
+    under-counts whenever a stride does not tile the image exactly, which
+    mis-masks real border columns."""
+    levels: list[_Level] = []
+    eh, ew = out_h, out_w
+    mul_h = mul_w = 1
+    off_h = off_w = 0
+    # level after the last op (the output level)
+    ih, iw = image_hw[len(ops)]
+    levels.append(_Level(eh, ew, ih, iw, mul_h, off_h, mul_w, off_w))
+    for i, op in enumerate(reversed(ops)):
+        if op.kind == ir.OpKind.POOL2D:
+            kh, kw = op.attrs["window"]
+            sh, sw = op.attrs["stride"]
+            ph, pw = op.attrs["padding"]
+            eh = ir.pool_in_extent(eh, kh, sh)
+            ew = ir.pool_in_extent(ew, kw, sw)
+            off_h = off_h * sh + ph
+            off_w = off_w * sw + pw
+            mul_h *= sh
+            mul_w *= sw
+        ih, iw = image_hw[len(ops) - 1 - i]
+        levels.append(_Level(eh, ew, ih, iw, mul_h, off_h, mul_w, off_w))
+    levels.reverse()           # levels[i] = input level of ops[i]
+    return levels
+
+
+def _pool_tile(x: jnp.ndarray, op: ir.OpNode, out_h: int, out_w: int
+               ) -> jnp.ndarray:
+    kh, kw = op.attrs["window"]
+    sh, sw = op.attrs["stride"]
+    acc = None
+    for di in range(kh):
+        for dj in range(kw):
+            part = x[di: di + (out_h - 1) * sh + 1: sh,
+                     dj: dj + (out_w - 1) * sw + 1: sw, :]
+            if acc is None:
+                acc = part
+            elif op.fn == "max":
+                acc = jnp.maximum(acc, part)
+            else:
+                acc = acc + part
+    if op.fn == "avg":
+        acc = acc / float(kh * kw)
+    return acc
+
+
+def _kernel(program: ir.StackProgram, levels: list[_Level],
+            pad_off_h: int, pad_off_w: int, n_params: int,
+            *refs) -> None:
+    src_ref = refs[0]
+    param_refs = refs[1: 1 + n_params]
+    out_ref = refs[1 + n_params]
+
+    n = pl.program_id(0)
+    pi = pl.program_id(1)
+    pj = pl.program_id(2)
+
+    lv0 = levels[0]
+    out_lv = levels[-1]
+    # tile origin at the input level, in *unpadded* image coordinates
+    g0h = pi * out_lv.extent_h * lv0.mul_h - lv0.off_h
+    g0w = pj * out_lv.extent_w * lv0.mul_w - lv0.off_w
+    # load from the pre-padded array (always in-bounds)
+    buf = src_ref[n, pl.dslice(g0h + pad_off_h, lv0.extent_h),
+                  pl.dslice(g0w + pad_off_w, lv0.extent_w), :]
+
+    # (1, C) param blocks broadcast against (h, w, C) tiles.
+    params = {name: ref[...] for name, ref in
+              zip(program.param_names, param_refs)}
+
+    env: dict[str, jnp.ndarray] = {program.inputs[0]: buf}
+    origins = {program.inputs[0]: (g0h, g0w)}
+    lvl_of = {program.inputs[0]: 0}
+
+    for i, op in enumerate(program.ops):
+        lv_in = levels[i]
+        lv_out = levels[i + 1]
+        if op.kind == ir.OpKind.POOL2D:
+            x = env[op.inputs[0]]
+            oh, ow = origins[op.inputs[0]]
+            # mask positions outside the true image at this level; fill with
+            # the pool's neutral element = that pool's padding semantics.
+            rh = oh + jax.lax.broadcasted_iota(jnp.int32, x.shape[:2], 0)
+            rw = ow + jax.lax.broadcasted_iota(jnp.int32, x.shape[:2], 1)
+            valid = ((rh >= 0) & (rh < lv_in.image_h)
+                     & (rw >= 0) & (rw < lv_in.image_w))[..., None]
+            neutral = (jnp.finfo(x.dtype).min if op.fn == "max"
+                       else jnp.zeros((), x.dtype))
+            x = jnp.where(valid, x, neutral)
+            y = _pool_tile(x, op, lv_out.extent_h, lv_out.extent_w)
+            sh, sw = op.attrs["stride"]
+            ph, pw = op.attrs["padding"]
+            # exact by construction: origin_in = origin_out * s - p
+            origins[op.output] = ((oh + ph) // sh, (ow + pw) // sw)
+            env[op.output] = y
+        else:
+            env[op.output] = ir.apply_op(op, env, params)
+            origins[op.output] = origins[op.inputs[0]]
+        lvl_of[op.output] = i + 1
+
+    out_ref[...] = env[program.outputs[0]][None]
+
+
+def fused_nhwc_call(program: ir.StackProgram,
+                    x: jnp.ndarray,
+                    params: Mapping[str, jnp.ndarray],
+                    *,
+                    tile_out_h: int = 8,
+                    tile_out_w: int = 8,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Run a single-input nhwc sequence as one fused Pallas kernel."""
+    if len(program.inputs) != 1:
+        raise ValueError("nhwc fused kernels support single-input stacks; "
+                         "multi-input stacks fall back to the XLA path")
+    n, h, w, c = x.shape
+    shapes = ir.infer_shapes(program, {program.inputs[0]: x.shape})
+    _, oh, ow, _ = shapes[program.outputs[0]]
+
+    th = min(tile_out_h, oh)
+    tw = min(tile_out_w, ow)
+    pad_oh = (-oh) % th
+    pad_ow = (-ow) % tw
+    grid = (n, (oh + pad_oh) // th, (ow + pad_ow) // tw)
+
+    image_hw = [(h, w)]
+    for op in program.ops:
+        s_ = shapes[op.output]
+        image_hw.append((s_[1], s_[2]))
+    levels = _plan_levels(program.ops, th, tw, image_hw)
+    lv0 = levels[0]
+    out_lv = levels[-1]
+
+    # Pre-pad the input so every halo load is in-bounds.  Left pad covers the
+    # most negative origin (off); right pad covers the last tile's reach.
+    left_h, left_w = lv0.off_h, lv0.off_w
+    last_g0h = (grid[1] - 1) * th * lv0.mul_h - lv0.off_h
+    last_g0w = (grid[2] - 1) * tw * lv0.mul_w - lv0.off_w
+    right_h = max(0, last_g0h + lv0.extent_h - h)
+    right_w = max(0, last_g0w + lv0.extent_w - w)
+    xp = jnp.pad(x, ((0, 0), (left_h, right_h), (left_w, right_w), (0, 0)))
+
+    pnames = list(program.param_names)
+    pvals = [jnp.asarray(params[p]).reshape(1, -1) for p in pnames]
+
+    in_specs = [pl.BlockSpec(memory_space=pl.ANY)]
+    in_specs += [pl.BlockSpec((1, v.shape[-1]), lambda i, j, k: (0, 0))
+                 for v in pvals]
+    out_spec = pl.BlockSpec((1, th, tw, c), lambda i, j, k: (i, j, k, 0))
+    out_shape = jax.ShapeDtypeStruct((n, oh + pad_oh, ow + pad_ow, c), x.dtype)
+
+    fn = pl.pallas_call(
+        functools.partial(_kernel, program, levels, left_h, left_w,
+                          len(pvals)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    out = fn(xp, *pvals)
+    return out[:, :oh, :ow, :]

@@ -1,0 +1,92 @@
+"""Jitted wrappers for the generated fused-stack kernels.
+
+``fused_stack_apply`` dispatches one collapsed Sequence:
+
+* mode ``brainslug``  — the generated Pallas kernel (depth-first schedule).
+  Training works through ``jax.custom_vjp``: forward runs the kernel,
+  backward recomputes through the reference interpreter (fusion changes the
+  schedule, not the math, so the reference VJP is exact).
+* mode ``xla``        — jit of the interpreter (XLA fuses what it can).
+* mode ``barrier``    — per-op ``optimization_barrier`` (paper's
+  breadth-first baseline; every intermediate is materialized).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ir
+from repro.kernels.fused_stack import nhwc, ref, rows
+
+MODES = ("brainslug", "xla", "barrier")
+
+
+def fused_stack_apply(program: ir.StackProgram,
+                      inputs: Mapping[str, jnp.ndarray],
+                      params: Mapping[str, jnp.ndarray],
+                      *,
+                      mode: str = "xla",
+                      tile_rows: int = 256,
+                      tile_out_h: int = 8,
+                      tile_out_w: int = 8,
+                      interpret: bool = True) -> dict[str, jnp.ndarray]:
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if mode == "barrier":
+        return ref.fused_stack_ref(program, inputs, params, barrier=True)
+    if mode == "xla":
+        return ref.fused_stack_ref(program, inputs, params)
+
+    # mode == 'brainslug': differentiable Pallas dispatch.
+    names = tuple(program.inputs)
+    pnames = tuple(program.param_names)
+    in_list = tuple(inputs[n] for n in names)
+    p_list = tuple(params[p] for p in pnames)
+    outs = _pallas_diff(program, names, pnames, tile_rows, tile_out_h,
+                        tile_out_w, interpret, in_list, p_list)
+    return dict(zip(program.outputs, outs))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _pallas_diff(program, names, pnames, tile_rows, th, tw, interpret,
+                 in_list, p_list):
+    inputs = dict(zip(names, in_list))
+    params = dict(zip(pnames, p_list))
+    if program.layout == "rows" or len(names) > 1:
+        if program.layout == "nhwc":
+            # multi-input nhwc stacks fall back to the XLA path (documented)
+            out = ref.fused_stack_ref(program, inputs, params)
+            return tuple(out[v] for v in program.outputs)
+        out = rows.fused_rows_call(program, inputs, params,
+                                   tile_rows=tile_rows, interpret=interpret)
+        return tuple(out[v] for v in program.outputs)
+    y = nhwc.fused_nhwc_call(program, inputs[names[0]], params,
+                             tile_out_h=th, tile_out_w=tw,
+                             interpret=interpret)
+    return (y,)
+
+
+def _fwd(program, names, pnames, tile_rows, th, tw, interpret,
+         in_list, p_list):
+    outs = _pallas_diff(program, names, pnames, tile_rows, th, tw, interpret,
+                        in_list, p_list)
+    return outs, (in_list, p_list)
+
+
+def _bwd(program, names, pnames, tile_rows, th, tw, interpret, res, g):
+    in_list, p_list = res
+
+    def reference(ins, ps):
+        out = ref.fused_stack_ref(program, dict(zip(names, ins)),
+                                  dict(zip(pnames, ps)))
+        return tuple(out[v] for v in program.outputs)
+
+    _, vjp = jax.vjp(reference, in_list, p_list)
+    din, dp = vjp(tuple(g))
+    return din, dp
+
+
+_pallas_diff.defvjp(_fwd, _bwd)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused stack kernels.
+
+The oracle *is* the IR interpreter run breadth-first — semantically identical
+to PyTorch layer-by-layer execution of the same stack.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax.numpy as jnp
+
+from repro.core import ir
+
+
+def fused_stack_ref(program: ir.StackProgram,
+                    inputs: Mapping[str, jnp.ndarray],
+                    params: Mapping[str, jnp.ndarray],
+                    *,
+                    barrier: bool = False) -> dict[str, jnp.ndarray]:
+    return ir.run_program(program, inputs, params, barrier=barrier)

@@ -1,0 +1,116 @@
+"""Generated depth-first kernel for rows-layout stacks (LM chains).
+
+One ``pl.pallas_call`` executes an entire collapsed Sequence on a
+``(tile_rows, features)`` VMEM tile: the tile is read from HBM once, every
+op of the sequence is applied while it is VMEM/VREG-resident, and the result
+is written back once.  This is the paper's depth-first schedule with VMEM
+playing the role of the L1/shared-memory cache.
+
+The kernel *body* is the shared IR interpreter (:func:`repro.core.ir.apply_op`)
+traced over the tile values — the same semantics object that defines the
+reference path, so the generated kernel cannot drift from the oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ir
+
+
+def _kernel(program: ir.StackProgram, n_inputs: int, n_params: int,
+            *refs) -> None:
+    in_refs = refs[:n_inputs]
+    param_refs = refs[n_inputs:n_inputs + n_params]
+    out_refs = refs[n_inputs + n_params:]
+
+    env = {name: ref[...] for name, ref in zip(program.inputs, in_refs)}
+    # Params keep their (1, F) block shape; broadcasting against the
+    # (tile_rows, F) tiles is free and avoids 1-D operands on TPU.
+    params = {name: ref[...] for name, ref in
+              zip(program.param_names, param_refs)}
+    for op in program.ops:
+        env[op.output] = ir.apply_op(op, env, params)
+    for name, ref in zip(program.outputs, out_refs):
+        ref[...] = env[name]
+
+
+def fused_rows_call(program: ir.StackProgram,
+                    inputs: Mapping[str, jnp.ndarray],
+                    params: Mapping[str, jnp.ndarray],
+                    *,
+                    tile_rows: int = 256,
+                    interpret: bool = True) -> dict[str, jnp.ndarray]:
+    """Run a rows-layout sequence as one fused Pallas kernel.
+
+    Every input must share the same leading shape ``(..., F_i)``; leading
+    dims are flattened to a row dimension that is tiled by ``tile_rows``.
+    Parameters are per-feature vectors (or scalars) held fully in VMEM.
+    """
+    names = list(program.inputs)
+    arrays = [inputs[n] for n in names]
+    lead = arrays[0].shape[:-1]
+    for n, a in zip(names, arrays):
+        if a.shape[:-1] != lead:
+            raise ValueError(f"{program.name}: input {n} leading shape "
+                             f"{a.shape[:-1]} != {lead}")
+
+    rows = 1
+    for d in lead:
+        rows *= d
+    flat = [a.reshape(rows, a.shape[-1]) for a in arrays]
+
+    pad = (-rows) % tile_rows
+    if pad:
+        flat = [jnp.pad(a, ((0, pad), (0, 0))) for a in flat]
+    padded_rows = rows + pad
+    grid = (padded_rows // tile_rows,)
+
+    # Parameters: reshape to (1, F) so TPU sees 2-D operands.
+    pnames = list(program.param_names)
+    pvals = []
+    for p in pnames:
+        v = jnp.asarray(params[p])
+        pvals.append(v.reshape(1, -1) if v.ndim <= 1 else v.reshape(1, v.shape[-1]))
+
+    # Infer output shapes/dtypes from the interpreter on ShapeDtypeStructs.
+    out_shapes = _infer_outputs(program, flat, names, pnames, pvals)
+
+    in_specs = [pl.BlockSpec((tile_rows, a.shape[-1]), lambda i: (i, 0))
+                for a in flat]
+    in_specs += [pl.BlockSpec((1, v.shape[-1]), lambda i: (0, 0))
+                 for v in pvals]
+    out_specs = [pl.BlockSpec((tile_rows, s.shape[-1]), lambda i: (i, 0))
+                 for s in out_shapes]
+
+    fn = pl.pallas_call(
+        functools.partial(_kernel, program, len(flat), len(pvals)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shapes),
+        interpret=interpret,
+    )
+    outs = fn(*flat, *pvals)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    result = {}
+    for name, o in zip(program.outputs, outs):
+        o = o[:rows] if pad else o
+        result[name] = o.reshape(*lead, o.shape[-1])
+    return result
+
+
+def _infer_outputs(program: ir.StackProgram, flat, names, pnames, pvals):
+    def run(*args):
+        env = dict(zip(names, args[: len(names)]))
+        ps = dict(zip(pnames, args[len(names):]))
+        out = ir.run_program(program, env, ps)
+        return tuple(out[v] for v in program.outputs)
+
+    shapes = jax.eval_shape(run, *flat, *pvals)
+    return [jax.ShapeDtypeStruct(s.shape, s.dtype) for s in shapes]

@@ -1,0 +1,38 @@
+"""Differentiable dispatch for fused residual+RMSNorm."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm import ref as ref_mod
+from repro.kernels.rmsnorm import rmsnorm as kernel_mod
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def rmsnorm(x, scale, residual=None, eps: float = 1e-6,
+            block_rows: int = 256, interpret: bool = True):
+    return kernel_mod.rmsnorm_fwd(x, scale, residual, eps=eps,
+                                  block_rows=block_rows, interpret=interpret)
+
+
+def _fwd(x, scale, residual, eps, block_rows, interpret):
+    out = rmsnorm(x, scale, residual, eps, block_rows, interpret)
+    return out, (x, scale, residual)
+
+
+def _bwd(eps, block_rows, interpret, res, g):
+    x, scale, residual = res
+    if residual is None:
+        def f(x_, s_):
+            return ref_mod.rmsnorm_ref(x_, s_, None, eps=eps)
+        _, vjp = jax.vjp(f, x, scale)
+        dx, ds = vjp(g)
+        return dx, ds, None
+    def f(x_, s_, r_):
+        return ref_mod.rmsnorm_ref(x_, s_, r_, eps=eps)
+    _, vjp = jax.vjp(f, x, scale, residual)
+    return vjp(g)
+
+
+rmsnorm.defvjp(_fwd, _bwd)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for fused residual+RMSNorm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray,
+                residual: jnp.ndarray | None = None,
+                *, eps: float = 1e-6):
+    h = x + residual if residual is not None else x
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    y = (hf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+         ).astype(h.dtype)
+    return y, h

@@ -1,0 +1,91 @@
+"""Chunked SSD (state-space duality) — pure-JAX production path.
+
+The SSD decomposition (Dao & Gu, 2024) splits the sequence into chunks of
+length L: within a chunk the recurrence is a masked matmul (MXU-friendly);
+across chunks a tiny (N, P) state is carried by a scan.  This *is* the
+depth-first idea at the sequence level — each chunk's O(L²) work happens on
+VMEM-resident tiles, and only the (N, P) state crosses chunk boundaries.
+
+All math in float32; cast back at the end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray | None = None,
+                *, chunk: int = 64) -> jnp.ndarray:
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Af = A.astype(jnp.float32)
+
+    dtx = dtf[..., None] * xf                            # (b,nc,L,h,p)
+    dta = dtf * Af[None, None, None, :]                  # (b,nc,L,h)
+    a = jnp.cumsum(dta, axis=2)                          # inclusive cumsum
+    a_last = a[:, :, -1]                                 # (b,nc,h)
+
+    # --- intra-chunk: masked (L, L) attention-like matmul ----------------
+    g = jnp.einsum("bcln,bcmn->bclm", Cf, Bf)            # (b,nc,L,L)
+    seg = a[:, :, :, None, :] - a[:, :, None, :, :]      # (b,nc,L,L,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    m = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    y_intra = jnp.einsum("bclm,bclmh,bcmhp->bclhp", g, m, dtx)
+
+    # --- chunk states ------------------------------------------------------
+    state_decay = jnp.exp(a_last[:, :, None, :] - a)     # (b,nc,L,h)
+    S = jnp.einsum("bcln,bclh,bclhp->bchnp", Bf, state_decay, dtx)
+
+    # --- inter-chunk scan over the tiny (h, n, p) state --------------------
+    lam = jnp.exp(a_last)                                # (b,nc,h)
+
+    def step(hprev, inputs):
+        lam_c, S_c = inputs
+        hnew = hprev * lam_c[..., None, None] + S_c
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, hprevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(lam, 1, 0), jnp.moveaxis(S, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                  # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp",
+                         Cf, jnp.exp(a), hprevs)
+
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * \
+            x.astype(jnp.float32).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(hstate: jnp.ndarray, x_t: jnp.ndarray, dt_t: jnp.ndarray,
+                    A: jnp.ndarray, B_t: jnp.ndarray, C_t: jnp.ndarray,
+                    D: jnp.ndarray | None = None):
+    """Single-token recurrent step for serving.
+
+    hstate: (B,H,N,P); x_t: (B,H,P); dt_t: (B,H); B_t/C_t: (B,N).
+    Returns (new_state, y_t)."""
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))
+    dBx = jnp.einsum("bn,bhp->bhnp", B_t.astype(jnp.float32),
+                     dt_t.astype(jnp.float32)[..., None]
+                     * x_t.astype(jnp.float32))
+    hnew = hstate * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(jnp.float32), hnew)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, :, None] * x_t.astype(jnp.float32)
+    return hnew, y.astype(x_t.dtype)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the Mamba2 SSD mixer: exact sequential recurrence.
+
+State update per time step (post-discretization):
+
+    h_t = exp(dt_t * A) * h_{t-1} + B_t (dt_t * x_t)^T      h: (N, P)
+    y_t = C_t^T h_t + D * x_t
+
+Shapes: x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,N) (single group),
+D (H,).  Slow but unambiguous — the oracle every faster path must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray | None = None
+            ) -> jnp.ndarray:
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(hstate, t):
+        dA = jnp.exp(dtf[:, t] * Af[None, :])               # (B, H)
+        dBx = jnp.einsum("bn,bhp->bhnp", Bf[:, t],
+                         dtf[:, t][..., None] * xf[:, t])   # (B,H,N,P)
+        hstate = hstate * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhnp->bhp", Cf[:, t], hstate)
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1)                               # (B,S,H,P)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype)

@@ -1,0 +1,29 @@
+"""Differentiable dispatch for the fused SwiGLU gate."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.swiglu import ref as ref_mod
+from repro.kernels.swiglu import swiglu as kernel_mod
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def swiglu(gate, up, act: str = "silu", block_rows: int = 256,
+           interpret: bool = True):
+    return kernel_mod.swiglu_fwd(gate, up, act=act, block_rows=block_rows,
+                                 interpret=interpret)
+
+
+def _fwd(gate, up, act, block_rows, interpret):
+    return swiglu(gate, up, act, block_rows, interpret), (gate, up)
+
+
+def _bwd(act, block_rows, interpret, res, g):
+    gate, up = res
+    _, vjp = jax.vjp(lambda a, b: ref_mod.swiglu_ref(a, b, act=act), gate, up)
+    return vjp(g)
+
+
+swiglu.defvjp(_fwd, _bwd)

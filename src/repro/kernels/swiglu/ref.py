@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the SwiGLU gate."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "squared_relu": lambda x: jnp.square(jnp.maximum(x, 0.0)),
+}
+
+
+def swiglu_ref(gate: jnp.ndarray, up: jnp.ndarray,
+               *, act: str = "silu") -> jnp.ndarray:
+    return (_ACTS[act](gate.astype(jnp.float32)).astype(gate.dtype) * up)

@@ -1,0 +1,75 @@
+"""Functional module substrate.
+
+Parameters are nested dicts of arrays.  Each leaf is created through
+:func:`boxed` with *logical axis names*; ``split`` separates the value tree
+from the axes tree.  The distributed layer maps logical axes onto mesh axes
+(``repro.distributed.sharding``), so models never mention the mesh.
+
+Logical axis vocabulary:
+    "fsdp"     — dim sharded over the data axis (ZeRO-3 style)
+    "model"ish — "heads", "kv_heads", "ffn", "vocab" — dims sharded over the
+                 model (TP) axis
+    "experts"  — dim sharded over the data axis (expert parallelism)
+    None       — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Box:
+    value: jnp.ndarray
+    axes: tuple[str | None, ...]
+
+    def __post_init__(self) -> None:
+        if len(self.axes) != self.value.ndim:
+            raise ValueError(
+                f"axes {self.axes} rank != value rank {self.value.shape}")
+
+
+def boxed(key, shape, axes, *, scale: float | None = None,
+          dtype=jnp.float32, init: str = "normal") -> Box:
+    if init == "normal":
+        if scale is None:
+            scale = 1.0 / (shape[0] ** 0.5)
+        v = jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype)
+    elif init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        raise ValueError(init)
+    return Box(v, tuple(axes))
+
+
+def split(tree: Any) -> tuple[Any, Any]:
+    """Split a Box tree into (values, axes) trees of identical structure."""
+    values = jax.tree_util.tree_map(
+        lambda b: b.value, tree, is_leaf=lambda x: isinstance(x, Box))
+    axes = jax.tree_util.tree_map(
+        lambda b: b.axes, tree, is_leaf=lambda x: isinstance(x, Box))
+    return values, axes
+
+
+def stack_layer_trees(trees: list) -> Any:
+    """Stack per-layer Box trees along a new leading 'layers' axis (scan)."""
+    def stack(*boxes: Box) -> Box:
+        return Box(jnp.stack([b.value for b in boxes]),
+                   ("layers",) + boxes[0].axes)
+    return jax.tree_util.tree_map(stack, *trees,
+                                  is_leaf=lambda x: isinstance(x, Box))
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
+def param_count(tree: Any) -> int:
+    return sum(int(a.size) for a in jax.tree_util.tree_leaves(tree))

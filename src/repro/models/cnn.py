@@ -1,0 +1,100 @@
+"""The paper's evaluation domain: CNNs as BrainSlug NetGraphs.
+
+Two constructors:
+
+* :func:`block_net` — the paper's §5.1 synthetic benchmark: N consecutive
+  ``<MaxPool(3x3, s1, p1), BatchNorm, ReLU>`` blocks (Fig. 10).
+* :func:`vgg_net` — a VGG-style network (conv/BN/ReLU/pool stages + head),
+  the §5.2 full-network family stand-in.
+
+Both return ``(NetGraph, params, input_shape)`` ready for
+``repro.core.api.optimize_graph`` — the transparent ``optimize(model)``
+workflow from the paper's Listing 3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ir
+
+
+def _block_ops(i: int, vin: str) -> tuple[list[ir.OpNode], str]:
+    ops = [
+        ir.OpNode(ir.OpKind.POOL2D, f"pool{i}", (vin,), f"p{i}", fn="max",
+                  attrs={"window": (3, 3), "stride": (1, 1),
+                         "padding": (1, 1)}),
+        ir.OpNode(ir.OpKind.AFFINE, f"bn{i}", (f"p{i}",), f"b{i}",
+                  params=(f"bn{i}_s", f"bn{i}_o")),
+        ir.OpNode(ir.OpKind.EW_UNARY, f"relu{i}", (f"b{i}",), f"r{i}",
+                  fn="relu"),
+    ]
+    return ops, f"r{i}"
+
+
+def block_net(n_blocks: int, channels: int = 32,
+              key=None) -> tuple[ir.NetGraph, dict]:
+    """Paper Fig. 10: a pure stack of <MaxPool, BN, ReLU> blocks."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ops: list[ir.OpNode] = []
+    v = "x"
+    params: dict[str, jnp.ndarray] = {}
+    for i in range(n_blocks):
+        blk, v = _block_ops(i, v)
+        ops.extend(blk)
+        k1, k2, key = jax.random.split(key, 3)
+        params[f"bn{i}_s"] = 1.0 + 0.1 * jax.random.normal(k1, (channels,))
+        params[f"bn{i}_o"] = 0.1 * jax.random.normal(k2, (channels,))
+    graph = ir.NetGraph(name=f"blocknet{n_blocks}", input="x", output=v,
+                        ops=tuple(ops))
+    return graph, params
+
+
+def vgg_net(stages: tuple[int, ...] = (32, 64, 128), in_channels: int = 3,
+            n_classes: int = 10, batch_norm: bool = True,
+            key=None) -> tuple[ir.NetGraph, dict]:
+    """VGG-style: per stage [conv3x3 -> (BN) -> ReLU -> MaxPool(2,2)],
+    then global-avg-pool head + linear classifier."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ops: list[ir.OpNode] = []
+    params: dict[str, jnp.ndarray] = {}
+    v = "x"
+    cin = in_channels
+    for i, cout in enumerate(stages):
+        k1, key = jax.random.split(key)
+        params[f"conv{i}_w"] = (jax.random.normal(k1, (3, 3, cin, cout))
+                                * (2.0 / (9 * cin)) ** 0.5)
+        ops.append(ir.OpNode(
+            ir.OpKind.CONV2D, f"conv{i}", (v,), f"c{i}",
+            params=(f"conv{i}_w",),
+            attrs={"kernel_shape": (3, 3, cin, cout), "stride": (1, 1),
+                   "padding": (1, 1)}))
+        v = f"c{i}"
+        if batch_norm:
+            k1, k2, key = jax.random.split(key, 3)
+            params[f"bn{i}_s"] = 1.0 + 0.1 * jax.random.normal(k1, (cout,))
+            params[f"bn{i}_o"] = 0.1 * jax.random.normal(k2, (cout,))
+            ops.append(ir.OpNode(ir.OpKind.AFFINE, f"bn{i}", (v,), f"b{i}",
+                                 params=(f"bn{i}_s", f"bn{i}_o")))
+            v = f"b{i}"
+        ops.append(ir.OpNode(ir.OpKind.EW_UNARY, f"relu{i}", (v,), f"r{i}",
+                             fn="relu"))
+        v = f"r{i}"
+        ops.append(ir.OpNode(ir.OpKind.POOL2D, f"mp{i}", (v,), f"m{i}",
+                             fn="max", attrs={"window": (2, 2),
+                                              "stride": (2, 2),
+                                              "padding": (0, 0)}))
+        v = f"m{i}"
+        cin = cout
+    # head: global average pool expressed as OPAQUE mean + linear
+    ops.append(ir.OpNode(
+        ir.OpKind.OPAQUE, "gap", (v,), "g",
+        attrs={"fn": lambda x: jnp.mean(x, axis=(1, 2))}))
+    k1, key = jax.random.split(key)
+    params["head_w"] = jax.random.normal(k1, (stages[-1], n_classes)) \
+        * (1.0 / stages[-1]) ** 0.5
+    ops.append(ir.OpNode(ir.OpKind.MATMUL, "head", ("g",), "y",
+                         params=("head_w",),
+                         attrs={"features_out": n_classes}))
+    graph = ir.NetGraph(name="vgg", input="x", output="y", ops=tuple(ops))
+    return graph, params

@@ -1,0 +1,427 @@
+"""Unified language-model assembly for every assigned architecture family.
+
+One module covers dense / MoE / SSM / hybrid / audio-encoder / VLM because
+they share the substrate: embedding (or modality-stub projection), a scanned
+stack of blocks, fused BrainSlug norm/act chains, final norm, vocab head,
+loss.  Family differences are *data*, not code paths:
+
+* ``layer_plan(cfg)`` describes the repeating super-block (e.g. llama4:
+  ``("attn_dense", "attn_moe")``; zamba2: 13 mamba + 1 shared-attn) and the
+  heterogeneous tail.
+* Blocks are scanned (``jax.lax.scan``) over stacked per-layer params —
+  compile time and HLO size stay bounded for 64-81-layer models.
+* The residual stream uses a (resid, pending) carry so every residual add
+  fuses with the next norm (maximal BrainSlug stack coverage).
+
+Decode mirrors the same plan with per-layer caches (KV or Mamba state)
+stacked along the scan axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RuntimeConfig
+from repro.layers import attention, base, dense, mamba2, moe, stacks
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    superblock: tuple[str, ...]     # kinds within one scanned super-block
+    n_super: int
+    tail: tuple[str, ...]           # unscanned remainder (hybrid only)
+
+    @property
+    def uses_shared_attn(self) -> bool:
+        return "shared_attn" in self.superblock or "shared_attn" in self.tail
+
+
+def layer_plan(cfg: ModelConfig) -> LayerPlan:
+    if cfg.family == "ssm":
+        return LayerPlan(("mamba",), cfg.n_layers, ())
+    if cfg.family == "hybrid":
+        q = cfg.attn_layer_period
+        n_super = cfg.n_layers // q
+        tail = ("mamba",) * (cfg.n_layers % q)
+        return LayerPlan(("mamba",) * (q - 1) + ("shared_attn",),
+                         n_super, tail)
+    if cfg.n_experts:
+        p = cfg.moe_layer_period
+        if cfg.n_layers % p:
+            raise ValueError(f"{cfg.name}: n_layers % moe_layer_period != 0")
+        return LayerPlan(("attn_dense",) * (p - 1) + ("attn_moe",),
+                         cfg.n_layers // p, ())
+    return LayerPlan(("attn_dense",), cfg.n_layers, ())
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_sub(key, kind: str, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    if kind == "mamba":
+        return {"norm1": dense.norm_init(ks[0], cfg, dtype),
+                "mixer": mamba2.init(ks[1], cfg, dtype)}
+    p = {"norm1": dense.norm_init(ks[0], cfg, dtype),
+         "attn": attention.init(ks[1], cfg, dtype),
+         "norm2": dense.norm_init(ks[2], cfg, dtype)}
+    if kind == "attn_moe":
+        p["moe"] = moe.init(ks[3], cfg, dtype)
+    else:                                   # attn_dense / shared_attn
+        p["mlp"] = dense.init(ks[3], cfg, dtype=dtype)
+    return p
+
+
+def init(key, cfg: ModelConfig) -> tuple[Any, Any]:
+    """Returns (params, logical_axes) trees."""
+    dtype = jnp.dtype(cfg.dtype) if cfg.dtype != "float32" else jnp.float32
+    plan = layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+
+    tree: dict[str, Any] = {}
+    tree["embed"] = base.boxed(keys[0], (cfg.vocab_size, cfg.d_model),
+                               ("vocab", None), dtype=dtype,
+                               scale=0.02 if cfg.tie_embeddings else None)
+    if not cfg.tie_embeddings:
+        tree["out_head"] = base.boxed(
+            keys[1], (cfg.d_model, cfg.vocab_size), (None, "vocab"),
+            dtype=dtype)
+    if cfg.frontend:
+        tree["frontend_proj"] = base.boxed(
+            keys[2], (cfg.frontend_dim, cfg.d_model), (None, None),
+            dtype=dtype)
+    tree["final_norm"] = dense.norm_init(keys[3], cfg, dtype)
+
+    # scanned super-blocks
+    blk_keys = jax.random.split(keys[4], max(plan.n_super, 1))
+    blocks = []
+    for i in range(plan.n_super):
+        sub_keys = jax.random.split(blk_keys[i], len(plan.superblock))
+        blk = {}
+        for j, kind in enumerate(plan.superblock):
+            if kind == "shared_attn":
+                continue                    # params shared, stored once
+            blk[f"sub{j}"] = _init_sub(sub_keys[j], kind, cfg, dtype)
+        blocks.append(blk)
+    if blocks and blocks[0]:
+        tree["blocks"] = base.stack_layer_trees(blocks)
+    if plan.uses_shared_attn:
+        tree["shared_attn"] = _init_sub(keys[5], "shared_attn", cfg, dtype)
+    if plan.tail:
+        # tail kinds are all 'mamba' (hybrid remainder layers)
+        tail = [{"sub0": _init_sub(k, "mamba", cfg, dtype)}
+                for k in jax.random.split(keys[6], len(plan.tail))]
+        tree["tail"] = base.stack_layer_trees(tail)
+    return base.split(tree)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_sub(kind: str, p, carry, cfg: ModelConfig, rt: RuntimeConfig,
+               shared_params=None):
+    resid, pending, aux = carry
+    norm_kw = dict(norm=cfg.norm, mode=rt.mode, interpret=rt.interpret)
+    if kind == "mamba":
+        h1, resid = stacks.add_norm(pending, resid, p["norm1"]["scale"],
+                                    p["norm1"].get("bias"), **norm_kw)
+        out = mamba2.apply(p["mixer"], h1, cfg, rt)
+        return (resid, out, aux)
+    if kind == "shared_attn":
+        p = shared_params
+    h1, resid = stacks.add_norm(pending, resid, p["norm1"]["scale"],
+                                p["norm1"].get("bias"), **norm_kw)
+    attn_out = attention.apply(p["attn"], h1, cfg, rt)
+    h2, resid = stacks.add_norm(attn_out, resid, p["norm2"]["scale"],
+                                p["norm2"].get("bias"), **norm_kw)
+    if "moe" in p:
+        out, moe_aux = moe.apply(p["moe"], h2, cfg, rt)
+        aux = {k: aux[k] + moe_aux[k] for k in aux}
+    else:
+        out = dense.apply(p["mlp"], h2, cfg, rt)
+    return (resid, out, aux)
+
+
+def _remat(fn, rt: RuntimeConfig):
+    if rt.remat == "full":
+        return jax.checkpoint(fn)
+    if rt.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def embed_inputs(params, batch: dict, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.frontend == "audio_frames":
+        return batch["frames"] @ params["frontend_proj"]
+    x = params["embed"][batch["tokens"]]
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.frontend == "vision_patches":
+        pre = batch["patches"] @ params["frontend_proj"]
+        x = jnp.concatenate([pre.astype(x.dtype), x], axis=1)
+    return x
+
+
+def hidden(params, batch: dict, cfg: ModelConfig, rt: RuntimeConfig
+           ) -> tuple[jnp.ndarray, dict]:
+    """Backbone only: returns (final-normed hidden states, aux)."""
+    plan = layer_plan(cfg)
+    x = embed_inputs(params, batch, cfg)
+    aux0 = {"router_aux_loss": jnp.zeros((), jnp.float32),
+            "drop_fraction": jnp.zeros((), jnp.float32)}
+    shared = params.get("shared_attn")
+
+    def block_body(carry, blk_params):
+        resid, pending, aux = carry
+        for j, kind in enumerate(plan.superblock):
+            p = blk_params.get(f"sub{j}")
+            resid, pending, aux = _apply_sub(
+                kind, p, (resid, pending, aux), cfg, rt, shared)
+        return (resid, pending, aux), None
+
+    body = _remat(block_body, rt)
+    carry = (x, jnp.zeros_like(x), aux0)
+    if "blocks" in params:
+        carry, _ = jax.lax.scan(body, carry, params["blocks"])
+    if "tail" in params:
+        def tail_body(c, p):
+            return (_apply_sub("mamba", p["sub0"], c, cfg, rt), None)
+        carry, _ = jax.lax.scan(_remat(tail_body, rt), carry, params["tail"])
+    resid, pending, aux = carry
+    h = resid + pending
+
+    h = stacks.apply_norm(h, params["final_norm"]["scale"],
+                          params["final_norm"].get("bias"), norm=cfg.norm,
+                          mode=rt.mode, interpret=rt.interpret)
+    return h, aux
+
+
+def forward(params, batch: dict, cfg: ModelConfig, rt: RuntimeConfig
+            ) -> tuple[jnp.ndarray, dict]:
+    """Returns (logits, aux)."""
+    h, aux = hidden(params, batch, cfg, rt)
+    return _logits(params, h, cfg), aux
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, rt: RuntimeConfig
+            ) -> jnp.ndarray:
+    """Inference prefill: run the backbone over the full prompt, project
+    only the last position (full-sequence logits are never materialized)."""
+    h, _ = hidden(params, batch, cfg, rt)
+    return _logits(params, h[:, -1:], cfg)
+
+
+def _logits(params, h: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", h, params["out_head"])
+
+
+def _nll_from_hidden(params, h, labels, cfg: ModelConfig,
+                     chunk: int, unroll: bool = False) -> jnp.ndarray:
+    """Masked next-token NLL.  ``chunk > 0`` computes the vocab projection
+    and log-sum-exp in sequence chunks under jax.checkpoint, bounding the
+    (B, S, V) f32 logits working set — the memory-roofline lever for the
+    256k-vocab archs."""
+    def chunk_nll(h_c, labels_c):
+        lf = _logits(params, h_c, cfg).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(
+            lf, jnp.maximum(labels_c, 0)[..., None], axis=-1)[..., 0]
+        mask = (labels_c >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    s = h.shape[1]
+    if chunk <= 0 or s <= chunk or s % chunk:
+        total, count = chunk_nll(h, labels)
+        return total / jnp.maximum(count, 1.0)
+    nc = s // chunk
+    hc = h.reshape(h.shape[0], nc, chunk, h.shape[-1]).swapaxes(0, 1)
+    lc = labels.reshape(labels.shape[0], nc, chunk).swapaxes(0, 1)
+    body = jax.checkpoint(chunk_nll)
+
+    def scan_body(carry, xs):
+        t, c = body(*xs)
+        return (carry[0] + t, carry[1] + c), None
+
+    (total, count), _ = jax.lax.scan(
+        scan_body, (jnp.zeros(()), jnp.zeros(())), (hc, lc),
+        unroll=nc if unroll else 1)
+    return total / jnp.maximum(count, 1.0)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, rt: RuntimeConfig
+            ) -> tuple[jnp.ndarray, dict]:
+    """Next-token (or frame-label) cross entropy; labels < 0 are masked."""
+    h, aux = hidden(params, batch, cfg, rt)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_patches":
+        h = h[:, -labels.shape[1]:]                 # text positions only
+    if rt.mode == "brainslug" and not cfg.tie_embeddings:
+        # depth-first fused CE kernel: the (T, V) logits never hit HBM
+        from repro.kernels.vocab_ce import ops as ce_ops
+        nll = ce_ops.fused_nll(
+            h.reshape(-1, h.shape[-1]), params["out_head"],
+            labels.reshape(-1), 128, 512, 512, rt.interpret)
+    else:
+        nll = _nll_from_hidden(params, h, labels, cfg, rt.fused_loss_chunk,
+                               unroll=rt.loss_unroll)
+    loss = nll + cfg.router_aux_weight * aux["router_aux_loss"]
+    metrics = {"loss": loss, "nll": nll, **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Single-super-block entry points (roofline trip-count correction).
+#
+# XLA's cost_analysis counts a while-loop body ONCE.  The dry-run therefore
+# lowers one scanned super-block straight-line (inner chunk scans unrolled via
+# rt.scan_unroll) and adds (n_super - 1) x its cost to the full-step cost.
+# ---------------------------------------------------------------------------
+
+def superblock_fwd(blk_params, shared, x, cfg: ModelConfig,
+                   rt: RuntimeConfig):
+    """One super-block application on hidden states x (B, S, D)."""
+    plan = layer_plan(cfg)
+    aux = {"router_aux_loss": jnp.zeros((), jnp.float32),
+           "drop_fraction": jnp.zeros((), jnp.float32)}
+    carry = (x, jnp.zeros_like(x), aux)
+    for j, kind in enumerate(plan.superblock):
+        p = blk_params.get(f"sub{j}") if blk_params else None
+        carry = _apply_sub(kind, p, carry, cfg, rt, shared)
+    resid, pending, aux = carry
+    return resid + pending, aux
+
+
+def tail_fwd(tail_params, x, cfg: ModelConfig, rt: RuntimeConfig):
+    """One tail (mamba) layer application (hybrid remainder)."""
+    aux = {"router_aux_loss": jnp.zeros((), jnp.float32),
+           "drop_fraction": jnp.zeros((), jnp.float32)}
+    carry = _apply_sub("mamba", tail_params["sub0"], (x, jnp.zeros_like(x),
+                                                      aux), cfg, rt)
+    resid, pending, _ = carry
+    return resid + pending
+
+
+def superblock_decode(blk_params, shared, blk_cache, x, cfg: ModelConfig,
+                      rt: RuntimeConfig):
+    """One super-block decode step on x (B, 1, D) with this block's cache."""
+    plan = layer_plan(cfg)
+    carry = (x, jnp.zeros_like(x))
+    new_cache = {}
+    for j, kind in enumerate(plan.superblock):
+        p = blk_params.get(f"sub{j}") if blk_params else None
+        carry, new_cache[f"sub{j}"] = _decode_sub(
+            kind, p, blk_cache[f"sub{j}"], carry, cfg, rt, shared)
+    resid, pending = carry
+    return resid + pending, new_cache
+
+
+def tail_decode(tail_params, tail_cache, x, cfg: ModelConfig,
+                rt: RuntimeConfig):
+    carry, new_cache = _decode_sub(
+        "mamba", tail_params["sub0"], tail_cache["sub0"],
+        (x, jnp.zeros_like(x)), cfg, rt)
+    resid, pending = carry
+    return resid + pending, {"sub0": new_cache}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    plan = layer_plan(cfg)
+
+    def sub_cache(kind: str):
+        if kind == "mamba":
+            return mamba2.init_cache(cfg, batch, dtype)
+        return attention.init_cache(cfg, batch, max_len, dtype)
+
+    cache: dict[str, Any] = {}
+    if plan.n_super:
+        per_layer = [{f"sub{j}": sub_cache(kind)
+                      for j, kind in enumerate(plan.superblock)}
+                     for _ in range(plan.n_super)]
+        cache["blocks"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_layer)
+    if plan.tail:
+        per_tail = [{"sub0": sub_cache("mamba")} for _ in plan.tail]
+        cache["tail"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_tail)
+    return cache
+
+
+def _decode_sub(kind: str, p, cache, carry, cfg, rt, shared_params=None):
+    resid, pending = carry
+    norm_kw = dict(norm=cfg.norm, mode=rt.mode, interpret=rt.interpret)
+    if kind == "mamba":
+        h1, resid = stacks.add_norm(pending, resid, p["norm1"]["scale"],
+                                    p["norm1"].get("bias"), **norm_kw)
+        out, cache = mamba2.decode(p["mixer"], h1, cache, cfg, rt)
+        return (resid, out), cache
+    if kind == "shared_attn":
+        p = shared_params
+    h1, resid = stacks.add_norm(pending, resid, p["norm1"]["scale"],
+                                p["norm1"].get("bias"), **norm_kw)
+    attn_out, cache = attention.decode(p["attn"], h1, cache, cfg, rt)
+    h2, resid = stacks.add_norm(attn_out, resid, p["norm2"]["scale"],
+                                p["norm2"].get("bias"), **norm_kw)
+    if "moe" in p:
+        # serving is dropless: dropping a live request's token to a
+        # capacity limit is a training-only trade-off
+        out, _ = moe.apply(p["moe"], h2, cfg, rt, dropless=True)
+    else:
+        out = dense.apply(p["mlp"], h2, cfg, rt)
+    return (resid, out), cache
+
+
+def decode_step(params, cache: dict, tokens_t: jnp.ndarray,
+                cfg: ModelConfig, rt: RuntimeConfig
+                ) -> tuple[jnp.ndarray, dict]:
+    """One serving step: tokens_t (B, 1) -> (logits (B, 1, V), new cache)."""
+    plan = layer_plan(cfg)
+    x = params["embed"][tokens_t]
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    shared = params.get("shared_attn")
+    new_cache: dict[str, Any] = {}
+
+    def block_body(carry, scanned):
+        blk_params, blk_cache = scanned
+        out_cache = {}
+        for j, kind in enumerate(plan.superblock):
+            p = blk_params.get(f"sub{j}")
+            carry, out_cache[f"sub{j}"] = _decode_sub(
+                kind, p, blk_cache[f"sub{j}"], carry, cfg, rt, shared)
+        return carry, out_cache
+
+    carry = (x, jnp.zeros_like(x))
+    if "blocks" in params:
+        carry, new_cache["blocks"] = jax.lax.scan(
+            block_body, carry, (params["blocks"], cache["blocks"]))
+    if "tail" in params:
+        def tail_body(c, scanned):
+            p, cc = scanned
+            c, out = _decode_sub("mamba", p["sub0"], cc["sub0"], c, cfg, rt)
+            return c, {"sub0": out}
+        carry, new_cache["tail"] = jax.lax.scan(
+            tail_body, carry, (params["tail"], cache["tail"]))
+    resid, pending = carry
+    h = resid + pending
+    h = stacks.apply_norm(h, params["final_norm"]["scale"],
+                          params["final_norm"].get("bias"), norm=cfg.norm,
+                          mode=rt.mode, interpret=rt.interpret)
+    return _logits(params, h, cfg), new_cache

@@ -1,0 +1,76 @@
+"""AdamW with decoupled weight decay, global-norm clipping, bf16-safe
+master accumulators — built from scratch (no optax dependency).
+
+State layout mirrors the param tree: ``{"mu": tree, "nu": tree,
+"count": scalar}`` with f32 moments regardless of param dtype, so the
+optimizer is stable when params are bf16 (standard mixed-precision
+practice; the f32 moments are what FSDP shards across the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+
+def init(params: Any) -> dict:
+    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(f32, params),
+        "nu": jax.tree_util.tree_map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(cfg: AdamWConfig, grads: Any, state: dict, params: Any
+           ) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = state["count"] + 1
+    lr = cfg.lr(count) if callable(cfg.lr) else jnp.asarray(cfg.lr)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def leaf(p, g, mu, nu):
+        gf = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1 - cfg.b1) * gf
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(gf)
+        step = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) \
+            if p.ndim >= 2 else 0.0          # no decay on norms/bias
+        new_p = p.astype(jnp.float32) - lr * (step + decay)
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [leaf(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "mu": tdef.unflatten([o[1] for o in out]),
+        "nu": tdef.unflatten([o[2] for o in out]),
+        "count": count,
+    }
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

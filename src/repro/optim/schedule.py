@@ -1,0 +1,18 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_fraction: float = 0.1):
+    """Linear warmup then cosine decay to ``final_fraction * peak``."""
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        progress = jnp.clip((step - warmup_steps)
+                            / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_fraction + (1 - final_fraction)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule

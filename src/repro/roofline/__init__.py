@@ -1,0 +1,128 @@
+"""Roofline analysis over dry-run artifacts.
+
+For each (arch x shape x mesh) cell the dry-run recorded per-device HLO
+FLOPs / bytes-accessed (trip-count corrected, see ``launch.dryrun``) and
+per-device collective bytes parsed from the compiled HLO.  This module
+turns those into the three roofline terms for the target hardware
+(TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+    compute term    = HLO_FLOPs_per_chip   / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip   / HBM_bw
+    collective term = coll_bytes_per_chip  / link_bw
+
+(each term is the seconds that resource alone would need; the bottleneck is
+the largest).  MODEL_FLOPS is the analytic useful compute — 6·N·D for a
+training step, 2·N·D for prefill, 2·N·(B tokens) for one decode step, with
+N = active parameters for MoE — and MODEL_FLOPS / (HLO_FLOPs · chips) is
+the useful-compute fraction (remat/dispatch overhead shows up here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Iterable
+
+from repro.core.resource import DeviceSpec, TPU_V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    n_devices: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float
+    hlo_flops_total: float
+    collective_breakdown: dict
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time if the three terms fully overlap."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops / self.hlo_flops_total \
+            if self.hlo_flops_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful FLOPs / (bound time x peak)."""
+        denom = self.t_bound * self.n_devices * TPU_V5E.peak_flops_bf16
+        return self.model_flops / denom if denom else 0.0
+
+
+_SHAPES = {"train_4k": (256, 4096), "prefill_32k": (32, 32768),
+           "decode_32k": (128, 32768), "long_500k": (1, 524288)}
+
+
+def model_flops(cell: dict) -> float:
+    """Analytic useful FLOPs for the cell's kind (attention excluded by
+    convention — the HLO/model ratio surfaces it)."""
+    n = cell["n_active_params"]
+    kind = cell["kind"]
+    b, s = _SHAPES[cell["shape"]]
+    tokens = b if kind == "decode" else b * s
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def analyze(cell: dict, device: DeviceSpec = TPU_V5E) -> Roofline:
+    corr = cell.get("corrected") or {
+        "flops": cell["flops"], "bytes_accessed": cell["bytes_accessed"],
+        "collective_bytes": {k: float(v)
+                             for k, v in cell["collectives"]["bytes"].items()},
+    }
+    coll_total = sum(corr["collective_bytes"].values())
+    n_dev = cell["n_devices"]
+    return Roofline(
+        arch=cell["arch"], shape=cell["shape"], mesh=cell["mesh"],
+        kind=cell["kind"], n_devices=n_dev,
+        t_compute=corr["flops"] / device.peak_flops_bf16,
+        t_memory=corr["bytes_accessed"] / device.hbm_bandwidth,
+        t_collective=coll_total / device.ici_link_bandwidth,
+        model_flops=model_flops(cell),
+        hlo_flops_total=corr["flops"] * n_dev,
+        collective_breakdown=corr["collective_bytes"],
+    )
+
+
+def load_cells(result_dir: str, mesh: str | None = "single",
+               status: str = "ok") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell.get("status") != status:
+            continue
+        if mesh is not None and cell.get("mesh") != mesh:
+            continue
+        cells.append(cell)
+    return cells
+
+
+def table(rooflines: Iterable[Roofline]) -> str:
+    """Markdown roofline table (EXPERIMENTS.md §Roofline)."""
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s | "
+            "bottleneck | bound s | useful frac | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rooflines:
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.t_compute:.4f} | "
+            f"{r.t_memory:.4f} | {r.t_collective:.4f} | {r.bottleneck} | "
+            f"{r.t_bound:.4f} | {r.useful_fraction:.2f} | "
+            f"{r.roofline_fraction:.3f} |")
+    return "\n".join(rows)

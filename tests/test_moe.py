@@ -1,0 +1,133 @@
+"""MoE dispatch invariants + equivalence against a dense oracle."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, RuntimeConfig
+from repro.layers import dense, moe
+
+
+def _moe_cfg(**kw) -> ModelConfig:
+    base = dict(name="t", family="moe", n_layers=2, d_model=32, n_heads=4,
+                n_kv_heads=2, d_ff=16, vocab_size=64, n_experts=4, top_k=2,
+                capacity_factor=100.0)          # effectively no drops
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_single_expert_equals_dense(rng):
+    """E=1, k=1, no drops: the MoE layer must equal its one expert's MLP."""
+    cfg = _moe_cfg(n_experts=1, top_k=1)
+    rt = RuntimeConfig(mode="xla")
+    params_box = moe.init(jax.random.PRNGKey(0), cfg)
+    params = jax.tree_util.tree_map(
+        lambda b: b.value, params_box,
+        is_leaf=lambda x: hasattr(x, "value") and hasattr(x, "axes"))
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model), np.float32))
+    y, aux = moe.apply(params, x, cfg, rt)
+    dense_params = {"wg": params["wg"][0], "wu": params["wu"][0],
+                    "wd": params["wd"][0]}
+    want = dense.apply(dense_params, x, cfg, rt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+    assert float(aux["drop_fraction"]) == 0.0
+
+
+@pytest.mark.parametrize("top_k", [1, 2])
+def test_no_drop_combine_is_convex(rng, top_k):
+    """With huge capacity the output is a convex combination of expert
+    outputs: scaling all experts' outputs by c scales y by c."""
+    cfg = _moe_cfg(top_k=top_k)
+    rt = RuntimeConfig(mode="xla")
+    params_box = moe.init(jax.random.PRNGKey(0), cfg)
+    params = jax.tree_util.tree_map(
+        lambda b: b.value, params_box,
+        is_leaf=lambda x: hasattr(x, "value") and hasattr(x, "axes"))
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model), np.float32))
+    y1, _ = moe.apply(params, x, cfg, rt)
+    params2 = dict(params)
+    params2["wd"] = params["wd"] * 2.0
+    y2, _ = moe.apply(params2, x, cfg, rt)
+    np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_capacity_drops_and_fraction(rng):
+    cfg = _moe_cfg(capacity_factor=0.25)
+    rt = RuntimeConfig(mode="xla")
+    params_box = moe.init(jax.random.PRNGKey(0), cfg)
+    params = jax.tree_util.tree_map(
+        lambda b: b.value, params_box,
+        is_leaf=lambda x: hasattr(x, "value") and hasattr(x, "axes"))
+    x = jnp.asarray(rng.standard_normal((4, 32, cfg.d_model), np.float32))
+    y, aux = moe.apply(params, x, cfg, rt)
+    assert 0.0 <= float(aux["drop_fraction"]) <= 1.0
+    assert float(aux["drop_fraction"]) > 0.0     # capacity 0.25 must drop
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_router_aux_loss_uniform_lower_bound(rng):
+    """Switch aux loss is minimized (=1) at perfectly uniform routing; any
+    routing must score >= 1 - eps."""
+    cfg = _moe_cfg()
+    rt = RuntimeConfig(mode="xla")
+    params_box = moe.init(jax.random.PRNGKey(1), cfg)
+    params = jax.tree_util.tree_map(
+        lambda b: b.value, params_box,
+        is_leaf=lambda x: hasattr(x, "value") and hasattr(x, "axes"))
+    x = jnp.asarray(rng.standard_normal((2, 64, cfg.d_model), np.float32))
+    _, aux = moe.apply(params, x, cfg, rt)
+    assert float(aux["router_aux_loss"]) >= 1.0 - 1e-3
+
+
+def test_moe_is_differentiable(rng):
+    cfg = _moe_cfg()
+    rt = RuntimeConfig(mode="xla")
+    params_box = moe.init(jax.random.PRNGKey(0), cfg)
+    params = jax.tree_util.tree_map(
+        lambda b: b.value, params_box,
+        is_leaf=lambda x: hasattr(x, "value") and hasattr(x, "axes"))
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model), np.float32))
+
+    def loss(p):
+        y, aux = moe.apply(p, x, cfg, rt)
+        return jnp.sum(jnp.square(y)) + aux["router_aux_loss"]
+
+    g = jax.grad(loss)(params)
+    norms = [float(jnp.linalg.norm(v.astype(jnp.float32)))
+             for v in jax.tree_util.tree_leaves(g)]
+    assert all(np.isfinite(n) for n in norms)
+    assert any(n > 0 for n in norms)
+
+
+def test_assigned_moe_configs_route():
+    """granite (40e top-8) and llama4 (128e top-1) reduced configs run."""
+    for arch in ("granite-moe-3b-a800m", "llama4-maverick-400b-a17b"):
+        cfg = get_config(arch)
+        assert cfg.n_experts > 0
+        red = cfg.reduced()
+        assert red.n_experts <= 8 and red.top_k <= 2
+
+
+def test_grouped_equals_global_when_dropless(rng):
+    """With per-group dropless capacity both dispatch schemes compute the
+    identical function (grouping only changes which tokens a capacity
+    limit would drop; with no drops there is no difference)."""
+    cfg = _moe_cfg(top_k=2, capacity_factor=2.0)   # e/k = 2 -> dropless
+    params_box = moe.init(jax.random.PRNGKey(0), cfg)
+    params = jax.tree_util.tree_map(
+        lambda b: b.value, params_box,
+        is_leaf=lambda x: hasattr(x, "value") and hasattr(x, "axes"))
+    x = jnp.asarray(rng.standard_normal((4, 16, cfg.d_model), np.float32))
+    y_grouped, _ = moe.apply(params, x, cfg,
+                             RuntimeConfig(moe_dispatch="grouped"))
+    y_global, _ = moe.apply(params, x, cfg,
+                            RuntimeConfig(moe_dispatch="global"))
+    np.testing.assert_allclose(np.asarray(y_grouped), np.asarray(y_global),
+                               rtol=1e-5, atol=1e-5)

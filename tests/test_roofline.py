@@ -1,0 +1,101 @@
+"""Roofline-module unit tests + launcher knob resolution."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro import roofline
+from repro.configs import get_config
+from repro.configs.base import RuntimeConfig
+from repro.core.resource import TPU_V5E
+
+
+def _cell(**kw):
+    base = {
+        "arch": "deepseek-7b", "shape": "train_4k", "mesh": "single",
+        "status": "ok", "kind": "train", "n_devices": 256,
+        "flops": 1e12, "bytes_accessed": 1e12,
+        "collectives": {"bytes": {"all-gather": 1e9, "all-reduce": 2e9,
+                                  "reduce-scatter": 0, "all-to-all": 0,
+                                  "collective-permute": 0},
+                        "counts": {}},
+        "corrected": {"flops": 2e13, "bytes_accessed": 4e12,
+                      "collective_bytes": {"all-gather": 1e10,
+                                           "all-reduce": 2e10,
+                                           "reduce-scatter": 0.0,
+                                           "all-to-all": 0.0,
+                                           "collective-permute": 0.0}},
+        "n_params": 7e9, "n_active_params": 7e9,
+    }
+    base.update(kw)
+    return base
+
+
+class TestRooflineMath:
+    def test_terms(self):
+        r = roofline.analyze(_cell())
+        assert r.t_compute == pytest.approx(2e13 / TPU_V5E.peak_flops_bf16)
+        assert r.t_memory == pytest.approx(4e12 / TPU_V5E.hbm_bandwidth)
+        assert r.t_collective == pytest.approx(
+            3e10 / TPU_V5E.ici_link_bandwidth)
+        assert r.bottleneck == "memory"
+        assert r.t_bound == r.t_memory
+
+    def test_model_flops_by_kind(self):
+        d_train = roofline.model_flops(_cell())
+        assert d_train == pytest.approx(6 * 7e9 * 256 * 4096)
+        pre = _cell(shape="prefill_32k", kind="prefill")
+        assert roofline.model_flops(pre) == pytest.approx(
+            2 * 7e9 * 32 * 32768)
+        dec = _cell(shape="decode_32k", kind="decode")
+        assert roofline.model_flops(dec) == pytest.approx(2 * 7e9 * 128)
+
+    def test_useful_and_roofline_fraction(self):
+        r = roofline.analyze(_cell())
+        assert r.useful_fraction == pytest.approx(
+            roofline.model_flops(_cell()) / (2e13 * 256))
+        assert 0 < r.roofline_fraction < 1
+
+    def test_fallback_without_corrected(self):
+        c = _cell()
+        del c["corrected"]
+        r = roofline.analyze(c)
+        assert r.t_compute == pytest.approx(1e12 / TPU_V5E.peak_flops_bf16)
+
+    def test_load_cells_filters(self, tmp_path):
+        for i, (mesh, status) in enumerate(
+                [("single", "ok"), ("multi", "ok"), ("single", "error")]):
+            with open(tmp_path / f"c{i}.json", "w") as f:
+                json.dump(_cell(mesh=mesh, status=status), f)
+        assert len(roofline.load_cells(str(tmp_path), mesh="single")) == 1
+        assert len(roofline.load_cells(str(tmp_path), mesh=None)) == 2
+
+    def test_table_renders(self):
+        text = roofline.table([roofline.analyze(_cell())])
+        assert "deepseek-7b" in text and "memory" in text
+
+
+class TestResolveRt:
+    def _mesh(self):
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+            axis_names = ("data", "model")
+        return FakeMesh()
+
+    def test_moe_constraint_resolution(self):
+        from repro.launch.steps import resolve_rt
+        mesh = self._mesh()
+        rt = RuntimeConfig(moe_constraint="auto", moe_dispatch="grouped")
+        # 128 experts % 16 == 0 -> expert-parallel layout
+        llama4 = get_config("llama4-maverick-400b-a17b")
+        assert resolve_rt(llama4, mesh, rt).moe_constraint == "experts"
+        # 40 experts % 16 != 0 -> token-parallel layout
+        granite = get_config("granite-moe-3b-a800m")
+        assert resolve_rt(granite, mesh, rt).moe_constraint == "tokens"
+        # dense arch -> none
+        dense = get_config("deepseek-7b")
+        assert resolve_rt(dense, mesh, rt).moe_constraint == "none"
+        # explicit value untouched
+        rt2 = RuntimeConfig(moe_constraint="tokens")
+        assert resolve_rt(llama4, mesh, rt2).moe_constraint == "tokens"
