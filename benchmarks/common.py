@@ -29,8 +29,21 @@ def hlo_cost(fn: Callable, *args) -> dict:
     attacks)."""
     compiled = jax.jit(fn).lower(*args).compile()
     cost = compiled.cost_analysis()
+    # Older jax returns a one-element list of dicts.  Same shim as
+    # repro.launch.dryrun._cost_dict — duplicated on purpose: importing
+    # dryrun here would run its import-time XLA_FLAGS setup.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0))}
+
+
+def time_grad_fn(loss_fn: Callable, params, *args,
+                 repeats: int = 5, warmup: int = 2) -> float:
+    """Training-step timing: wall time of one jitted fwd+bwd
+    (``jax.grad`` of ``loss_fn`` in its first argument)."""
+    g = jax.jit(jax.grad(loss_fn))
+    return time_fn(g, params, *args, repeats=repeats, warmup=warmup)
 
 
 def write_csv(path: str, header: list[str], rows: list) -> None:
@@ -40,3 +53,13 @@ def write_csv(path: str, header: list[str], rows: list) -> None:
         f.write(",".join(header) + "\n")
         for row in rows:
             f.write(",".join(str(x) for x in row) + "\n")
+
+
+def write_json(path: str, rows: list[dict]) -> None:
+    """Benchmark rows as JSON (one object per row) next to the CSV — the
+    machine-readable artifact downstream tooling consumes."""
+    import json
+    import os
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2, default=float)

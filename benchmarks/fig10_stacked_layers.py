@@ -54,7 +54,8 @@ def traffic_ratio(n_blocks: int, channels: int, device, max_steps=None
 
 
 def run(block_counts=(1, 2, 4, 8, 12, 16, 24, 32, 40), channels=32,
-        batch=8, hw=16, out_csv="results/bench/fig10.csv") -> list:
+        batch=8, hw=16, out_csv="results/bench/fig10.csv",
+        out_json="results/bench/fig10.json") -> list:
     rows = []
     key = jax.random.PRNGKey(0)
     # paper-faithful tiny budget (the 16 kB shared-memory analogue) for the
@@ -71,12 +72,15 @@ def run(block_counts=(1, 2, 4, 8, 12, 16, 24, 32, 40), channels=32,
             "fused": api.optimize_graph(
                 graph, x.shape, api.OptimizeConfig(mode="xla")),
         }
-        times, bytes_ = {}, {}
+        times, times_train, bytes_ = {}, {}, {}
         for name, net in nets.items():
             fn = jax.jit(lambda xx, pp, net=net: net(xx, pp))
             times[name] = common.time_fn(fn, x, params)
             bytes_[name] = common.hlo_cost(
                 lambda xx, pp, net=net: net(xx, pp), x, params)["bytes"]
+            # training step (fwd+bwd): grads w.r.t. every parameter
+            times_train[name] = common.time_grad_fn(
+                lambda pp, net=net: jnp.sum(jnp.square(net(x, pp))), params)
 
         row = {
             "blocks": n,
@@ -90,14 +94,19 @@ def run(block_counts=(1, 2, 4, 8, 12, 16, 24, 32, 40), channels=32,
             "t_barrier_ms": times["barrier"] * 1e3,
             "t_fused_ms": times["fused"] * 1e3,
             "speedup": times["barrier"] / times["fused"],
+            "t_train_barrier_ms": times_train["barrier"] * 1e3,
+            "t_train_fused_ms": times_train["fused"] * 1e3,
+            "train_speedup": times_train["barrier"] / times_train["fused"],
         }
         rows.append(row)
         print(f"[fig10] blocks={n:3d} seqs(tiny)={row['seq_tiny_unrestricted']:2d} "
               f"traffic_ratio tpu={row['traffic_ratio_tpu']:5.2f}x "
               f"tiny={row['traffic_ratio_tiny']:5.2f}x "
               f"max1={row['traffic_ratio_tiny_max1']:5.2f}x "
-              f"wall {times['barrier']/times['fused']:.2f}x", flush=True)
+              f"wall {times['barrier']/times['fused']:.2f}x "
+              f"train {row['train_speedup']:.2f}x", flush=True)
     common.write_csv(out_csv, list(rows[0]), [list(r.values()) for r in rows])
+    common.write_json(out_json, rows)
     return rows
 
 

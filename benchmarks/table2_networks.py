@@ -66,7 +66,8 @@ def cnn_zoo():
     }
 
 
-def run_cnns(batch=8, hw=32, out_csv="results/bench/table2_cnn.csv"):
+def run_cnns(batch=8, hw=32, out_csv="results/bench/table2_cnn.csv",
+             out_json="results/bench/table2_cnn.json"):
     rows = []
     key = jax.random.PRNGKey(0)
     for name, ctor in cnn_zoo().items():
@@ -80,12 +81,21 @@ def run_cnns(batch=8, hw=32, out_csv="results/bench/table2_cnn.csv"):
         t = {m: common.time_fn(jax.jit(lambda xx, pp, net=net: net(xx, pp)),
                                x, params)
              for m, net in nets.items()}
+        # training step (fwd+bwd) under both schedules
+        tt = {m: common.time_grad_fn(
+                  lambda pp, net=net: jnp.sum(jnp.square(net(x, pp))),
+                  params)
+              for m, net in nets.items()}
         traffic = cnn_schedule_traffic(nets["xla"], params)
         row = dict(network=name, ops=total, optimizable=opt, stacks=stacks,
                    opt_pct=100.0 * opt / total,
                    t_barrier_ms=t["barrier"] * 1e3,
                    t_fused_ms=t["xla"] * 1e3,
                    wall_speedup_pct=100.0 * (t["barrier"] / t["xla"] - 1.0),
+                   t_train_barrier_ms=tt["barrier"] * 1e3,
+                   t_train_fused_ms=tt["xla"] * 1e3,
+                   train_speedup_pct=100.0 * (tt["barrier"] / tt["xla"]
+                                              - 1.0),
                    opt_traffic_ratio=traffic["opt_ratio"],
                    pct_of_total=traffic["pct_of_total"],
                    total_speedup_pct=traffic["total_speedup_pct"])
@@ -93,8 +103,10 @@ def run_cnns(batch=8, hw=32, out_csv="results/bench/table2_cnn.csv"):
         print(f"[table2-cnn] {name:12s} ops={total:3d} opt={opt:3d} "
               f"stacks={stacks:2d} opt_ratio={traffic['opt_ratio']:.2f}x "
               f"pct_of_total={traffic['pct_of_total']:5.1f}% "
-              f"total={traffic['total_speedup_pct']:+6.1f}%", flush=True)
+              f"total={traffic['total_speedup_pct']:+6.1f}% "
+              f"train={row['train_speedup_pct']:+6.1f}%", flush=True)
     common.write_csv(out_csv, list(rows[0]), [list(r.values()) for r in rows])
+    common.write_json(out_json, rows)
     return rows
 
 
@@ -171,7 +183,8 @@ def lm_block_traffic(cfg, tokens: int = 4096, itemsize: int = 2) -> dict:
     }
 
 
-def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv"):
+def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv",
+            out_json="results/bench/table2_lm.json"):
     rows = []
     for arch in ARCH_IDS:
         cfg = get_config(arch).reduced()
@@ -179,7 +192,7 @@ def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv"):
         batch = {k: jnp.asarray(v) for k, v in
                  data_mod.synth_batch(cfg, shape, 0).items()}
         params, _ = lm.init(jax.random.PRNGKey(0), cfg)
-        t, b = {}, {}
+        t, tt, b = {}, {}, {}
         for mode in ("barrier", "xla"):
             rt = RuntimeConfig(mode=mode)
             fn = jax.jit(lambda p, bb, rt=rt: lm.loss_fn(p, bb, cfg, rt)[0])
@@ -187,12 +200,21 @@ def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv"):
             b[mode] = common.hlo_cost(
                 lambda p, bb, rt=rt: lm.loss_fn(p, bb, cfg, rt)[0],
                 params, batch)["bytes"]
+            # training step (fwd+bwd): the half of the roofline the
+            # depth-first backward attacks
+            tt[mode] = common.time_grad_fn(
+                lambda p, bb, rt=rt: lm.loss_fn(p, bb, cfg, rt)[0],
+                params, batch)
         stacks, layers = lm_stack_census(cfg)
         traffic = lm_block_traffic(get_config(arch))
         row = dict(arch=arch, layers=layers, stacks=stacks,
                    t_barrier_ms=t["barrier"] * 1e3,
                    t_fused_ms=t["xla"] * 1e3,
                    wall_speedup_pct=100.0 * (t["barrier"] / t["xla"] - 1.0),
+                   t_train_barrier_ms=tt["barrier"] * 1e3,
+                   t_train_fused_ms=tt["xla"] * 1e3,
+                   train_speedup_pct=100.0 * (tt["barrier"] / tt["xla"]
+                                              - 1.0),
                    opt_traffic_ratio=traffic["opt_ratio"],
                    pct_of_total=traffic["pct_of_total"],
                    total_speedup_pct=traffic["total_speedup_pct"])
@@ -200,8 +222,10 @@ def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv"):
         print(f"[table2-lm] {arch:26s} stacks={stacks:4d} "
               f"opt_ratio={traffic['opt_ratio']:.2f}x "
               f"pct_of_total={traffic['pct_of_total']:5.1f}% "
-              f"total={traffic['total_speedup_pct']:+6.1f}%", flush=True)
+              f"total={traffic['total_speedup_pct']:+6.1f}% "
+              f"train={row['train_speedup_pct']:+6.1f}%", flush=True)
     common.write_csv(out_csv, list(rows[0]), [list(r.values()) for r in rows])
+    common.write_json(out_json, rows)
     return rows
 
 

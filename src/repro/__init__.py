@@ -1,3 +1,3 @@
 """repro: BrainSlug depth-first parallelism on TPU — JAX/Pallas framework."""
 
-__version__ = "0.1.0"
+__version__ = "0.2.0"

@@ -29,6 +29,10 @@ class OptimizeConfig:
     interpret: bool = True       # Pallas interpret mode (CPU validation)
     itemsize: int = 4
     max_steps_per_sequence: int | None = None
+    # Size collapse plans for training: the generated rows backward holds
+    # the recomputed forward chain *and* live cotangents in VMEM, so
+    # differentiable plans get smaller tiles / earlier sequence splits.
+    differentiable: bool = False
 
 
 @dataclasses.dataclass
@@ -79,7 +83,8 @@ def optimize_graph(graph: ir.NetGraph,
             plan = collapse.collapse(
                 seg.stack, in_shapes, config.device,
                 itemsize=config.itemsize,
-                max_steps_per_sequence=config.max_steps_per_sequence)
+                max_steps_per_sequence=config.max_steps_per_sequence,
+                differentiable=config.differentiable)
             plans[idx] = plan
             executors[idx] = codegen.compile_plan(
                 plan, mode=config.mode, interpret=config.interpret)
@@ -96,7 +101,8 @@ def optimize_stack(program: ir.StackProgram,
                    ) -> codegen.Executor:
     plan = collapse.collapse(
         program, input_shapes, config.device, itemsize=config.itemsize,
-        max_steps_per_sequence=config.max_steps_per_sequence)
+        max_steps_per_sequence=config.max_steps_per_sequence,
+        differentiable=config.differentiable)
     return codegen.compile_plan(plan, mode=config.mode,
                                 interpret=config.interpret)
 

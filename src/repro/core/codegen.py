@@ -4,13 +4,21 @@ Turns a :class:`~repro.core.collapse.CollapsePlan` into an executable.
 Sequences run serially, communicating through materialized boundary values
 (paper §4.2); within a sequence the configured mode decides the schedule:
 
-* ``brainslug`` — the generated Pallas kernel (depth-first, VMEM-tiled),
+* ``brainslug`` — the generated Pallas kernels (depth-first, VMEM-tiled).
+  Compilation builds *both* halves of each sequence up front: the forward
+  kernel and the generated recompute-in-tile backward (one
+  :class:`~repro.kernels.fused_stack.ops.FusedExecutable` per sequence), so
+  ``jax.grad`` through the executor never constructs kernels on the hot
+  path.
 * ``xla``       — fused jnp closure (XLA's fusion = breadth-first compiler
   fusion; the beyond-paper comparison point),
 * ``barrier``   — per-op materialization (the paper's framework baseline).
 
 Generated executables are cached on the program's structural signature —
-the paper generates code once per equivalent stack and reuses it.
+the paper generates code once per equivalent stack and reuses it.  The
+fused forward+backward pairs are additionally cached inside
+:mod:`repro.kernels.fused_stack.ops` on the same signature, so two
+structurally identical stacks share one generated pair.
 """
 from __future__ import annotations
 
@@ -19,7 +27,6 @@ from typing import Callable, Mapping
 import jax.numpy as jnp
 
 from repro.core import collapse as collapse_mod
-from repro.core import ir, resource
 from repro.kernels.fused_stack import ops as fused_ops
 
 Executor = Callable[[Mapping[str, jnp.ndarray], Mapping[str, jnp.ndarray]],
@@ -40,6 +47,16 @@ def compile_plan(plan: collapse_mod.CollapsePlan, *, mode: str = "xla",
 
     subprograms = [plan.subprogram(i) for i in range(len(plan.sequences))]
 
+    if mode == "brainslug":
+        # Generate-once: build the fused forward+backward pair per sequence
+        # now (cached on structural signature inside fused_ops, so
+        # equivalent sequences across stacks share one pair).
+        for sub, seq in zip(subprograms, plan.sequences):
+            fused_ops.get_executable(
+                sub, tile_rows=seq.tile_rows or 256,
+                tile_out_h=seq.tile_out_h or 8,
+                tile_out_w=seq.tile_out_w or 8, interpret=interpret)
+
     def executor(inputs: Mapping[str, jnp.ndarray],
                  params: Mapping[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
         env = dict(inputs)
@@ -59,3 +76,4 @@ def compile_plan(plan: collapse_mod.CollapsePlan, *, mode: str = "xla",
 
 def clear_cache() -> None:
     _CODE_CACHE.clear()
+    fused_ops.clear_executable_cache()

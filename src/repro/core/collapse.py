@@ -103,16 +103,26 @@ def collapse(program: ir.StackProgram,
              device: resource.DeviceSpec = resource.TPU_V5E,
              *,
              itemsize: int = 2,
-             max_steps_per_sequence: int | None = None) -> CollapsePlan:
+             max_steps_per_sequence: int | None = None,
+             differentiable: bool = False) -> CollapsePlan:
     """Collapse ``program`` into sequences sized for ``device``.
 
     ``max_steps_per_sequence`` reproduces the paper's Fig. 10 strategy knob
     (1 step / 5 steps / unrestricted).
+
+    ``differentiable=True`` sizes sequences against the *joint* fwd+bwd
+    working set: the generated rows backward recomputes the forward chain on
+    the resident tile with cotangent buffers live alongside, so a sequence
+    whose forward fits the VMEM budget may overflow it in training.  The
+    knob shrinks ``tile_rows`` and splits sequences earlier so both
+    generated kernels respect the same budget.  (nhwc sequences are
+    unaffected — their backward runs on the reference path, which
+    materializes cotangents in HBM.)
     """
     steps = build_steps(program)
     if program.layout == "rows":
         seqs = _pack_rows(program, steps, input_shapes, device, itemsize,
-                          max_steps_per_sequence)
+                          max_steps_per_sequence, differentiable)
     else:
         seqs = _pack_nhwc(program, steps, input_shapes, device, itemsize,
                           max_steps_per_sequence)
@@ -122,39 +132,84 @@ def collapse(program: ir.StackProgram,
 def _pack_rows(program: ir.StackProgram, steps: list[Step],
                input_shapes: Mapping[str, tuple[int, ...]],
                device: resource.DeviceSpec, itemsize: int,
-               max_steps: int | None) -> list[SequencePlan]:
+               max_steps: int | None,
+               differentiable: bool = False) -> list[SequencePlan]:
     """rows layout: norms are row-local, so the working set never grows with
     stacking — one sequence almost always suffices; the row-tile extent is
-    chosen to fill the budget."""
+    chosen to fill the budget (the joint fwd+bwd budget when
+    ``differentiable``)."""
     features = max((input_shapes[v][-1] if v in input_shapes else 0)
                    for v in program.inputs)
+
+    def live_values(sub: ir.StackProgram) -> int:
+        return (resource.max_live_values_bwd(sub) if differentiable
+                else resource.max_live_values(sub))
+
+    def needed_after(si: int) -> set[str]:
+        """Values consumed by steps from index ``si`` on, or escaping the
+        stack — a flushed sequence must hold these live to its end (they
+        become the subprogram's outputs)."""
+        need = set(program.outputs)
+        for s in steps[si:]:
+            for op in s.ops:
+                need.update(op.inputs)
+        return need
+
     seqs: list[SequencePlan] = []
     pending: list[Step] = []
 
-    def flush() -> None:
+    def flush(later: set[str]) -> None:
         nonlocal pending
         if not pending:
             return
-        sub_ops = tuple(op for s in pending for op in s.ops)
-        sub = dataclasses.replace(program, ops=sub_ops)
-        rows = resource.pick_row_tile(sub, features, itemsize, device)
+        sub = _resource_view(program, tuple(op for s in pending
+                                            for op in s.ops), later)
+        rows = resource.pick_row_tile(sub, features, itemsize, device,
+                                      differentiable=differentiable)
         seqs.append(SequencePlan(steps=tuple(pending), tile_rows=rows))
         pending = []
 
-    for step in steps:
+    for si, step in enumerate(steps):
         pending.append(step)
-        sub_ops = tuple(op for s in pending for op in s.ops)
-        sub = dataclasses.replace(program, ops=sub_ops)
+        sub = _resource_view(program, tuple(op for s in pending
+                                            for op in s.ops),
+                             needed_after(si + 1))
         too_big = resource.rows_tile_bytes(
-            resource.max_live_values(sub), device.sublane, features, itemsize,
+            live_values(sub), device.sublane, features, itemsize,
             device) > device.resource_limit
         over_steps = max_steps is not None and len(pending) > max_steps
         if too_big or over_steps:
             pending.pop()
-            flush()
+            flush(needed_after(si))        # popped step consumes its inputs
             pending = [step]
-    flush()
+    flush(set(program.outputs))
     return seqs
+
+
+def _resource_view(program: ir.StackProgram,
+                   sub_ops: tuple[ir.OpNode, ...],
+                   needed_later: set[str] = frozenset()
+                   ) -> ir.StackProgram:
+    """A valid StackProgram over a candidate run of ops, for resource
+    accounting only: external inputs are whatever the run reads but does not
+    define (mid-stack boundary values included); outputs are the run tail
+    plus every run-defined value consumed after the run (cross-sequence
+    residuals stay live to the end of the sequence, exactly as in
+    ``CollapsePlan.subprogram``).  ``dataclasses.replace(program, ops=...)``
+    would fail validation for any run that is a strict sub-chain of the
+    stack."""
+    defined = {op.output for op in sub_ops}
+    ins: list[str] = []
+    for op in sub_ops:
+        for v in op.inputs:
+            if v not in defined and v not in ins:
+                ins.append(v)
+    outs = [op.output for op in sub_ops if op.output in needed_later]
+    if sub_ops[-1].output not in outs:
+        outs.append(sub_ops[-1].output)
+    return ir.StackProgram(name=program.name, inputs=tuple(ins),
+                           outputs=tuple(outs), ops=sub_ops,
+                           layout=program.layout)
 
 
 def _pack_nhwc(program: ir.StackProgram, steps: list[Step],

@@ -306,6 +306,31 @@ def _pool2d(x: jnp.ndarray, op: OpNode) -> jnp.ndarray:
     return summed / float(kh * kw)
 
 
+@jax.custom_vjp
+def opt_barrier(x: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable ``optimization_barrier``.
+
+    ``jax.lax.optimization_barrier`` has no differentiation rule, so the raw
+    primitive makes barrier mode untrainable.  Wrapped as a ``custom_vjp``
+    identity the barrier stays differentiable, and the *cotangent* is fenced
+    too: barrier mode must stay the breadth-first baseline in training
+    benchmarks, so XLA may not fuse across layers in the backward either.
+    (A ``custom_jvp`` identity cannot fence the tangent — the primitive has
+    no transpose rule, so a barrier'd tangent breaks reverse mode.)"""
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return opt_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
 def run_program(program: StackProgram,
                 env: Mapping[str, jnp.ndarray],
                 params: Mapping[str, jnp.ndarray],
@@ -319,7 +344,7 @@ def run_program(program: StackProgram,
     for op in program.ops:
         out = apply_op(op, env, params)
         if barrier:
-            out = jax.lax.optimization_barrier(out)
+            out = opt_barrier(out)
         env[op.output] = out
     return {v: env[v] for v in program.outputs}
 

@@ -113,13 +113,40 @@ def max_live_values(program: ir.StackProgram) -> int:
     return max(peak, 1)
 
 
+def max_live_values_bwd(program: ir.StackProgram) -> int:
+    """Peak number of simultaneously-live tile buffers in the *generated
+    depth-first backward* of ``program``.
+
+    The backward kernel recomputes the forward on the resident tile, so
+    every forward value (inputs + all op outputs) stays live for the whole
+    reverse sweep; on top of that the reverse sweep keeps cotangent buffers
+    live — the cotangent of a value is born when its producer's consumer is
+    transposed and dies once its own producer has been transposed.  This is
+    the joint fwd+bwd working set: a sequence whose forward fits the VMEM
+    budget may not fit once cotangents are live, which is exactly what the
+    ``differentiable=`` collapse knob guards against.
+    """
+    n_fwd = len(program.inputs) + len(program.ops)
+    # Cotangent liveness over the reversed program.
+    live: set[str] = set(program.outputs)
+    peak = len(live)
+    for op in reversed(program.ops):
+        live.discard(op.output)             # consumed by transposing this op
+        live.update(op.inputs)              # input cotangents now (partially) live
+        peak = max(peak, len(live))
+    return n_fwd + max(peak, 1)
+
+
 def pick_row_tile(program: ir.StackProgram, features: int, itemsize: int,
-                  spec: DeviceSpec) -> int:
+                  spec: DeviceSpec, *, differentiable: bool = False) -> int:
     """Choose the row-tile extent: the largest sublane multiple such that all
     live buffers fit the budget (paper: "if the cache size limit is not
     reached, we increase the size ... to better utilize the given hardware
-    resources")."""
-    n_live = max_live_values(program)
+    resources").  With ``differentiable=True`` the tile is sized against the
+    joint fwd+bwd working set (forward values held for recompute plus live
+    cotangents) so the same geometry serves both generated kernels."""
+    n_live = (max_live_values_bwd(program) if differentiable
+              else max_live_values(program))
     budget = spec.resource_limit
     rows = spec.sublane
     while True:

@@ -45,8 +45,11 @@ def pipeline_apply(block_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
         params = jax.tree_util.tree_map(lambda a: a[0], params)
         n_ticks = n_microbatches + n_stages - 1
         # carries become stage-varying inside the loop; mark them as such
-        buf = jax.lax.pvary(jnp.zeros_like(micro_in[0]), (axis,))
-        outputs = jax.lax.pvary(jnp.zeros_like(micro_in), (axis,))
+        # (pvary only exists on newer jax; older releases don't track
+        # varying axes, where the annotation is a no-op anyway)
+        pvary = getattr(jax.lax, "pvary", lambda v, axes: v)
+        buf = pvary(jnp.zeros_like(micro_in[0]), (axis,))
+        outputs = pvary(jnp.zeros_like(micro_in), (axis,))
 
         def tick(carry, t):
             buf, outputs = carry
@@ -78,7 +81,11 @@ def pipeline_apply(block_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
             jnp.where(stage == n_stages - 1, outputs, 0.0), axis)
         return outputs
 
-    sharded = jax.shard_map(
+    # jax.shard_map graduated from jax.experimental in newer releases
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:
+        from jax.experimental.shard_map import shard_map
+    sharded = shard_map(
         functools.partial(stage_body),
         mesh=mesh,
         in_specs=(P(axis), P()),

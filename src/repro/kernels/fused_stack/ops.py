@@ -2,26 +2,163 @@
 
 ``fused_stack_apply`` dispatches one collapsed Sequence:
 
-* mode ``brainslug``  — the generated Pallas kernel (depth-first schedule).
-  Training works through ``jax.custom_vjp``: forward runs the kernel,
-  backward recomputes through the reference interpreter (fusion changes the
-  schedule, not the math, so the reference VJP is exact).
+* mode ``brainslug``  — the generated Pallas kernels (depth-first schedule).
+  Training runs depth-first end to end: the forward kernel keeps the tile
+  VMEM-resident through the op chain, and the generated backward kernel
+  (:mod:`repro.kernels.fused_stack.rows_bwd`) recomputes the chain on the
+  resident tile and applies the per-op VJP rules of
+  :mod:`repro.core.autodiff` in reverse — no reference-interpreter dispatch
+  on the rows hot path.  nhwc / multi-input stacks keep the reference
+  backward (fusion changes the schedule, not the math, so the reference VJP
+  is exact).
 * mode ``xla``        — jit of the interpreter (XLA fuses what it can).
 * mode ``barrier``    — per-op ``optimization_barrier`` (paper's
   breadth-first baseline; every intermediate is materialized).
+
+Executables are built once per structural signature + tile geometry and
+cached (paper: "If there are multiple equivalent stacks, BRAINSLUG only
+generates the code once") — one cache entry holds *both* the forward and the
+backward kernel closure.
 """
 from __future__ import annotations
 
-import functools
-from typing import Mapping
+import dataclasses
+from typing import Callable, Mapping
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ir
-from repro.kernels.fused_stack import nhwc, ref, rows
+from repro.core import autodiff, ir
+from repro.kernels.fused_stack import nhwc, ref, rows, rows_bwd
 
 MODES = ("brainslug", "xla", "barrier")
+
+
+class DispatchStats:
+    """Trace-time dispatch counters (the mode stat the acceptance criteria
+    ask for): which backward ran — the generated depth-first kernel or the
+    reference-interpreter fallback.  Counts are incremented when the path is
+    *traced*, i.e. once per compilation, which is exactly the "was the
+    generated kernel used" question."""
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self.counts: dict[str, int] = {
+            "fwd_generated": 0, "fwd_reference": 0,
+            "bwd_generated": 0, "bwd_reference": 0,
+        }
+
+    def record(self, key: str) -> None:
+        self.counts[key] += 1
+
+
+STATS = DispatchStats()
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedExecutable:
+    """One generated forward+backward pair for a Sequence (brainslug mode)."""
+
+    program: ir.StackProgram
+    tile_rows: int
+    tile_out_h: int
+    tile_out_w: int
+    interpret: bool
+    call: Callable[..., tuple[jnp.ndarray, ...]]   # (in_list, p_list) -> outs
+    generated_bwd: bool                            # rows depth-first backward?
+
+
+_EXEC_CACHE: dict[tuple, FusedExecutable] = {}
+
+
+def get_executable(program: ir.StackProgram, *, tile_rows: int = 256,
+                   tile_out_h: int = 8, tile_out_w: int = 8,
+                   interpret: bool = True) -> FusedExecutable:
+    """Build (or fetch) the cached forward+backward executable for
+    ``program`` at the given tile geometry, keyed on the structural
+    signature so equivalent stacks share one generated pair."""
+    key = (program.signature(), tile_rows, tile_out_h, tile_out_w, interpret)
+    exe = _EXEC_CACHE.get(key)
+    if exe is None:
+        exe = _build_executable(program, tile_rows, tile_out_h, tile_out_w,
+                                interpret)
+        _EXEC_CACHE[key] = exe
+    return exe
+
+
+def clear_executable_cache() -> None:
+    _EXEC_CACHE.clear()
+
+
+def _build_executable(program: ir.StackProgram, tile_rows: int,
+                      tile_out_h: int, tile_out_w: int,
+                      interpret: bool) -> FusedExecutable:
+    names = tuple(program.inputs)
+    pnames = tuple(program.param_names)
+    rows_path = program.layout == "rows" or len(names) > 1
+    generated_bwd = (program.layout == "rows" and autodiff.supports(program))
+
+    def _forward(in_list, p_list):
+        inputs = dict(zip(names, in_list))
+        params = dict(zip(pnames, p_list))
+        if rows_path:
+            if program.layout == "nhwc":
+                # multi-input nhwc stacks fall back to the XLA path
+                STATS.record("fwd_reference")
+                out = ref.fused_stack_ref(program, inputs, params)
+                return tuple(out[v] for v in program.outputs)
+            STATS.record("fwd_generated")
+            out = rows.fused_rows_call(program, inputs, params,
+                                       tile_rows=tile_rows,
+                                       interpret=interpret)
+            return tuple(out[v] for v in program.outputs)
+        STATS.record("fwd_generated")
+        y = nhwc.fused_nhwc_call(program, inputs[names[0]], params,
+                                 tile_out_h=tile_out_h,
+                                 tile_out_w=tile_out_w,
+                                 interpret=interpret)
+        return (y,)
+
+    @jax.custom_vjp
+    def run(in_list, p_list):
+        return _forward(in_list, p_list)
+
+    def _fwd(in_list, p_list):
+        return _forward(in_list, p_list), (in_list, p_list)
+
+    def _bwd(res, g):
+        in_list, p_list = res
+        if generated_bwd:
+            # Depth-first backward: recompute the chain on the VMEM tile and
+            # apply the VJP rules in reverse — one HBM read per input, one
+            # write per cotangent, grid-summed parameter grads.
+            STATS.record("bwd_generated")
+            dins, dparams = rows_bwd.fused_rows_bwd_call(
+                program, dict(zip(names, in_list)),
+                dict(zip(pnames, p_list)),
+                dict(zip(program.outputs, g)),
+                tile_rows=tile_rows, interpret=interpret)
+            return (tuple(dins[n] for n in names),
+                    tuple(dparams[p] for p in pnames))
+
+        STATS.record("bwd_reference")
+
+        def reference(ins, ps):
+            out = ref.fused_stack_ref(program, dict(zip(names, ins)),
+                                      dict(zip(pnames, ps)))
+            return tuple(out[v] for v in program.outputs)
+
+        _, vjp = jax.vjp(reference, in_list, p_list)
+        din, dp = vjp(tuple(g))
+        return din, dp
+
+    run.defvjp(_fwd, _bwd)
+    return FusedExecutable(program=program, tile_rows=tile_rows,
+                           tile_out_h=tile_out_h, tile_out_w=tile_out_w,
+                           interpret=interpret, call=run,
+                           generated_bwd=generated_bwd)
 
 
 def fused_stack_apply(program: ir.StackProgram,
@@ -41,52 +178,9 @@ def fused_stack_apply(program: ir.StackProgram,
         return ref.fused_stack_ref(program, inputs, params)
 
     # mode == 'brainslug': differentiable Pallas dispatch.
-    names = tuple(program.inputs)
-    pnames = tuple(program.param_names)
-    in_list = tuple(inputs[n] for n in names)
-    p_list = tuple(params[p] for p in pnames)
-    outs = _pallas_diff(program, names, pnames, tile_rows, tile_out_h,
-                        tile_out_w, interpret, in_list, p_list)
+    exe = get_executable(program, tile_rows=tile_rows, tile_out_h=tile_out_h,
+                         tile_out_w=tile_out_w, interpret=interpret)
+    in_list = tuple(inputs[n] for n in program.inputs)
+    p_list = tuple(params[p] for p in program.param_names)
+    outs = exe.call(in_list, p_list)
     return dict(zip(program.outputs, outs))
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
-def _pallas_diff(program, names, pnames, tile_rows, th, tw, interpret,
-                 in_list, p_list):
-    inputs = dict(zip(names, in_list))
-    params = dict(zip(pnames, p_list))
-    if program.layout == "rows" or len(names) > 1:
-        if program.layout == "nhwc":
-            # multi-input nhwc stacks fall back to the XLA path (documented)
-            out = ref.fused_stack_ref(program, inputs, params)
-            return tuple(out[v] for v in program.outputs)
-        out = rows.fused_rows_call(program, inputs, params,
-                                   tile_rows=tile_rows, interpret=interpret)
-        return tuple(out[v] for v in program.outputs)
-    y = nhwc.fused_nhwc_call(program, inputs[names[0]], params,
-                             tile_out_h=th, tile_out_w=tw,
-                             interpret=interpret)
-    return (y,)
-
-
-def _fwd(program, names, pnames, tile_rows, th, tw, interpret,
-         in_list, p_list):
-    outs = _pallas_diff(program, names, pnames, tile_rows, th, tw, interpret,
-                        in_list, p_list)
-    return outs, (in_list, p_list)
-
-
-def _bwd(program, names, pnames, tile_rows, th, tw, interpret, res, g):
-    in_list, p_list = res
-
-    def reference(ins, ps):
-        out = ref.fused_stack_ref(program, dict(zip(names, ins)),
-                                  dict(zip(pnames, ps)))
-        return tuple(out[v] for v in program.outputs)
-
-    _, vjp = jax.vjp(reference, in_list, p_list)
-    din, dp = vjp(tuple(g))
-    return din, dp
-
-
-_pallas_diff.defvjp(_fwd, _bwd)

@@ -9,6 +9,9 @@ playing the role of the L1/shared-memory cache.
 The kernel *body* is the shared IR interpreter (:func:`repro.core.ir.apply_op`)
 traced over the tile values — the same semantics object that defines the
 reference path, so the generated kernel cannot drift from the oracle.
+
+The backward twin lives in :mod:`repro.kernels.fused_stack.rows_bwd` and
+shares this module's flatten/pad/param plumbing.
 """
 from __future__ import annotations
 
@@ -39,6 +42,39 @@ def _kernel(program: ir.StackProgram, n_inputs: int, n_params: int,
         ref[...] = env[name]
 
 
+def flatten_rows(prog_name: str, names: list[str],
+                 values: Mapping[str, jnp.ndarray], tile_rows: int
+                 ) -> tuple[list[jnp.ndarray], tuple[int, ...], int, int]:
+    """Flatten the named values to ``(rows, F)`` and zero-pad the row
+    dimension to a ``tile_rows`` multiple.  Returns
+    (flat arrays, lead shape, rows, pad)."""
+    arrays = [values[n] for n in names]
+    lead = arrays[0].shape[:-1]
+    for n, a in zip(names, arrays):
+        if a.shape[:-1] != lead:
+            raise ValueError(f"{prog_name}: value {n} leading shape "
+                             f"{a.shape[:-1]} != {lead}")
+    rows = 1
+    for d in lead:
+        rows *= d
+    flat = [a.reshape(rows, a.shape[-1]) for a in arrays]
+    pad = (-rows) % tile_rows
+    if pad:
+        flat = [jnp.pad(a, ((0, pad), (0, 0))) for a in flat]
+    return flat, lead, rows, pad
+
+
+def prep_params(program: ir.StackProgram,
+                params: Mapping[str, jnp.ndarray]) -> list[jnp.ndarray]:
+    """Reshape per-feature parameter vectors to (1, F) 2-D operands."""
+    pvals = []
+    for p in program.param_names:
+        v = jnp.asarray(params[p])
+        pvals.append(v.reshape(1, -1) if v.ndim <= 1
+                     else v.reshape(1, v.shape[-1]))
+    return pvals
+
+
 def fused_rows_call(program: ir.StackProgram,
                     inputs: Mapping[str, jnp.ndarray],
                     params: Mapping[str, jnp.ndarray],
@@ -52,30 +88,13 @@ def fused_rows_call(program: ir.StackProgram,
     Parameters are per-feature vectors (or scalars) held fully in VMEM.
     """
     names = list(program.inputs)
-    arrays = [inputs[n] for n in names]
-    lead = arrays[0].shape[:-1]
-    for n, a in zip(names, arrays):
-        if a.shape[:-1] != lead:
-            raise ValueError(f"{program.name}: input {n} leading shape "
-                             f"{a.shape[:-1]} != {lead}")
-
-    rows = 1
-    for d in lead:
-        rows *= d
-    flat = [a.reshape(rows, a.shape[-1]) for a in arrays]
-
-    pad = (-rows) % tile_rows
-    if pad:
-        flat = [jnp.pad(a, ((0, pad), (0, 0))) for a in flat]
+    flat, lead, rows, pad = flatten_rows(program.name, names, inputs,
+                                         tile_rows)
     padded_rows = rows + pad
     grid = (padded_rows // tile_rows,)
 
-    # Parameters: reshape to (1, F) so TPU sees 2-D operands.
     pnames = list(program.param_names)
-    pvals = []
-    for p in pnames:
-        v = jnp.asarray(params[p])
-        pvals.append(v.reshape(1, -1) if v.ndim <= 1 else v.reshape(1, v.shape[-1]))
+    pvals = prep_params(program, params)
 
     # Infer output shapes/dtypes from the interpreter on ShapeDtypeStructs.
     out_shapes = _infer_outputs(program, flat, names, pnames, pvals)

@@ -11,8 +11,14 @@ import jax
 from jax.sharding import Mesh
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes) -> Mesh:
+    # jax.sharding.AxisType (and make_mesh's axis_types kwarg) only exist on
+    # newer jax; older releases default to Auto axes anyway.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -20,10 +26,10 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh() -> Mesh:
     """Degenerate mesh over whatever devices exist (CPU smoke tests)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((n, 1), ("data", "model"))

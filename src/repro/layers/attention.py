@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RuntimeConfig
+from repro.core import ir
 from repro.kernels.attention import ops as attn_ops
 from repro.kernels.attention import ref as attn_ref
 from repro.layers import base
@@ -81,13 +82,13 @@ def _full_attention(q, k, v, causal: bool, barrier: bool) -> jnp.ndarray:
     s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k,
                    preferred_element_type=jnp.float32) * scale
     if barrier:
-        s = jax.lax.optimization_barrier(s)
+        s = ir.opt_barrier(s)
     if causal:
         mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
         s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     if barrier:
-        p = jax.lax.optimization_barrier(p)
+        p = ir.opt_barrier(p)
     # p stays f32 (casting the largest tensor costs a materialized copy;
     # the MXU consumes f32 LHS fine — v is promoted, a far smaller tensor)
     o = jnp.einsum("bgrqk,bgkd->bgrqd", p, v.astype(jnp.float32))

@@ -121,11 +121,15 @@ def test_hierarchical_psum_and_reduce_scatter():
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.distributed import collectives as coll
 
+        shard_map = getattr(jax, 'shard_map', None)
+        if shard_map is None:
+            from jax.experimental.shard_map import shard_map
+
         devs = np.array(jax.devices()[:8]).reshape(2, 4)
         mesh = Mesh(devs, ('pod', 'data'))
         x = jnp.arange(8.0).reshape(8, 1)
 
-        f = jax.shard_map(
+        f = shard_map(
             lambda v: coll.psum_hierarchical(v, pod_axis='pod',
                                              data_axis='data'),
             mesh=mesh, in_specs=P(('pod', 'data'), None),
@@ -133,7 +137,7 @@ def test_hierarchical_psum_and_reduce_scatter():
         y = f(x)
         np.testing.assert_allclose(np.asarray(y), 28.0)
 
-        g = jax.shard_map(
+        g = shard_map(
             lambda v: coll.reduce_scatter_mean(v, 'data', split_dim=1),
             mesh=mesh, in_specs=P('pod', None),
             out_specs=P('pod', 'data'))
@@ -173,7 +177,7 @@ def test_dryrun_cell_on_small_mesh():
                                  cell.out_shardings, mesh),
                              donate_argnums=cell.donate_argnums)
                 compiled = fn.lower(*cell.args).compile()
-            cost = compiled.cost_analysis()
+            cost = dryrun._cost_dict(compiled.cost_analysis())
             assert cost.get('flops', 0) > 0
             coll = dryrun.parse_collective_bytes(compiled.as_text())
             assert sum(coll['bytes'].values()) > 0, arch
