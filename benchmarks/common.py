@@ -8,6 +8,16 @@ from typing import Callable
 import jax
 
 
+def reset_dispatch_stats() -> None:
+    """Zero the fused-stack dispatch counters at a benchmark phase boundary.
+    STATS is a process-global singleton; without this, mode counts recorded
+    while one benchmark traces its executables bleed into the next phase's
+    numbers."""
+    from repro.kernels.fused_stack import ops as fused_ops
+
+    fused_ops.STATS.reset()
+
+
 def time_fn(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
     """Minimum wall time over ``repeats`` calls (paper §5: 'we take the
     minimum execution time')."""

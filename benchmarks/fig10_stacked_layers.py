@@ -56,6 +56,7 @@ def traffic_ratio(n_blocks: int, channels: int, device, max_steps=None
 def run(block_counts=(1, 2, 4, 8, 12, 16, 24, 32, 40), channels=32,
         batch=8, hw=16, out_csv="results/bench/fig10.csv",
         out_json="results/bench/fig10.json") -> list:
+    common.reset_dispatch_stats()      # benchmark start: fresh mode counts
     rows = []
     key = jax.random.PRNGKey(0)
     # paper-faithful tiny budget (the 16 kB shared-memory analogue) for the

@@ -14,6 +14,8 @@ import argparse
 import sys
 import time
 
+from benchmarks import common
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -26,6 +28,7 @@ def main(argv=None) -> int:
 
     for bench in args.benches:
         print(f"\n===== {bench} =====", flush=True)
+        common.reset_dispatch_stats()   # phase boundary: no count bleed
         if bench == "fig10":
             from benchmarks import fig10_stacked_layers as m
             m.run(block_counts=(1, 4, 16) if args.quick

@@ -68,6 +68,7 @@ def cnn_zoo():
 
 def run_cnns(batch=8, hw=32, out_csv="results/bench/table2_cnn.csv",
              out_json="results/bench/table2_cnn.json"):
+    common.reset_dispatch_stats()      # benchmark start: fresh mode counts
     rows = []
     key = jax.random.PRNGKey(0)
     for name, ctor in cnn_zoo().items():
@@ -185,6 +186,7 @@ def lm_block_traffic(cfg, tokens: int = 4096, itemsize: int = 2) -> dict:
 
 def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv",
             out_json="results/bench/table2_lm.json"):
+    common.reset_dispatch_stats()      # benchmark start: fresh mode counts
     rows = []
     for arch in ARCH_IDS:
         cfg = get_config(arch).reduced()

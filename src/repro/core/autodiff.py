@@ -11,9 +11,20 @@ run
 * inside the generated depth-first backward kernel
   (:mod:`repro.kernels.fused_stack.rows_bwd`), traced over VMEM tiles.
 
-Only the rows-layout op set is covered (elementwise, affine, row norms,
-row softmax, residual adds): that is exactly the set the generated rows
-kernels execute.  nhwc/pooling backward stays on the reference path.
+Both kernel layouts are covered: the rows op set (elementwise, affine, row
+norms, row softmax, residual adds) and POOL2D for nhwc pooling chains.  The
+pool rules are written over a *pre-padded patch* (out-of-image positions
+hold the pool's neutral element, exactly what the nhwc kernels feed them)
+so the same code runs on the halo-grown VMEM tile inside
+:mod:`repro.kernels.fused_stack.nhwc_bwd` and on padded full images in the
+oracle path.
+
+Max-pool tie convention: the **first** maximal element in row-major window
+order takes the whole cotangent — the jax/XLA ``select_and_scatter``
+convention, oracle-matched against ``jax.vjp`` of
+``lax.reduce_window(max)`` (ties are not split).  Avg-pool cotangents are
+scattered uniformly at ``g / (kh * kw)`` (count-include-pad, matching the
+forward's divisor).
 
 Conventions
 -----------
@@ -85,11 +96,11 @@ _UNARY_DERIVS: dict[str, Callable[[Array, Array], Array]] = {
     "softplus": lambda x, y: jax.nn.sigmoid(x),
 }
 
-#: OpKinds this module can differentiate (== what the generated rows
-#: backward kernel supports).
+#: OpKinds this module can differentiate (== what the generated backward
+#: kernels support — rows and nhwc layouts).
 DIFFERENTIABLE_KINDS = frozenset({
     ir.OpKind.EW_UNARY, ir.OpKind.EW_BINARY, ir.OpKind.AFFINE,
-    ir.OpKind.ROW_NORM, ir.OpKind.ROW_SOFTMAX,
+    ir.OpKind.ROW_NORM, ir.OpKind.ROW_SOFTMAX, ir.OpKind.POOL2D,
 })
 
 
@@ -160,7 +171,16 @@ def op_vjp(op: ir.OpNode, env: Mapping[str, Array],
         a = ins[0]
         b = ps[0] if ps else ins[1]
         da, db = _binary_vjp(op.fn, a, b, env[op.output], g)
-        din = {op.inputs[0]: _reduce_to(da, a)}
+        # The validity mask guards *reduced* value operands (nhwc broadcast
+        # side inputs, whichever slot they sit in): out-of-image tile
+        # positions recompute garbage primals, and 0 * inf or 0/0 would
+        # poison the reduction.
+        y_shape = jnp.shape(env[op.output])
+
+        def _vmask(operand):
+            return row_mask if jnp.shape(operand) != y_shape else None
+
+        din = {op.inputs[0]: _reduce_to(da, a, _vmask(a))}
         dparams: dict[str, Array] = {}
         if ps:
             dparams[op.params[0]] = _reduce_to(db, b, row_mask)
@@ -168,9 +188,9 @@ def op_vjp(op: ir.OpNode, env: Mapping[str, Array],
             # a value consumed twice (x + x) accumulates both cotangents
             key = op.inputs[1]
             if key in din:
-                din[key] = din[key] + _reduce_to(db, b)
+                din[key] = din[key] + _reduce_to(db, b, _vmask(b))
             else:
-                din[key] = _reduce_to(db, b)
+                din[key] = _reduce_to(db, b, _vmask(b))
         return din, dparams
 
     if op.kind == ir.OpKind.AFFINE:
@@ -187,6 +207,20 @@ def op_vjp(op: ir.OpNode, env: Mapping[str, Array],
         y = env[op.output]
         dot = jnp.sum(g * y, axis=-1, keepdims=True)
         return {op.inputs[0]: (y * (g - dot)).astype(ins[0].dtype)}, {}
+
+    if op.kind == ir.OpKind.POOL2D:
+        # Full-array oracle path: pad with the neutral element (what the
+        # forward's reduce_window padding computes with), run the shared
+        # patch rule, crop the padding back off.
+        x = ins[0]
+        ph, pw = op.attrs["padding"]
+        xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)),
+                     constant_values=pool_neutral(x.dtype, op.fn))
+        dxp = pool2d_patch_vjp(op, xp, env[op.output], g)
+        if ph or pw:
+            h, w = x.shape[-3], x.shape[-2]
+            dxp = dxp[..., ph: ph + h, pw: pw + w, :]
+        return {op.inputs[0]: dxp}, {}
 
     raise NotImplementedError(
         f"no VJP rule for op kind {op.kind} (op {op.name!r})")
@@ -209,6 +243,69 @@ def _binary_vjp(fn: str, a: Array, b: Array, y: Array, g: Array
         m = _balanced_max_mask(a, b, bigger=False)
         return g * m, g * (1.0 - m)
     raise NotImplementedError(f"no VJP rule for binary fn {fn!r}")
+
+
+def pool_neutral(dtype, fn: str):
+    """The pool's padding value: what an out-of-image position must hold so
+    the windowed reduction reproduces the layer's own padding semantics."""
+    if fn == "max":
+        return (jnp.finfo(dtype).min if jnp.issubdtype(dtype, jnp.floating)
+                else jnp.iinfo(dtype).min)
+    return jnp.zeros((), dtype)
+
+
+def _offset_scatter(c: Array, di: int, dj: int, in_h: int, in_w: int,
+                    sh: int, sw: int) -> Array:
+    """Place the window-offset-``(di, dj)`` cotangent contributions ``c``
+    (shape ``(..., oh, ow, C)``) at input positions ``(di + i*sh, dj + j*sw)``
+    of an ``(..., in_h, in_w, C)`` array — interior dilation by the stride
+    plus an edge offset, expressed as one ``lax.pad`` (maps onto cheap
+    VPU-friendly ops, no scatter)."""
+    oh, ow = c.shape[-3], c.shape[-2]
+    cfg = [(0, 0, 0)] * (c.ndim - 3)
+    cfg.append((di, in_h - di - ((oh - 1) * sh + 1), sh - 1))
+    cfg.append((dj, in_w - dj - ((ow - 1) * sw + 1), sw - 1))
+    cfg.append((0, 0, 0))
+    return jax.lax.pad(c, jnp.zeros((), c.dtype), cfg)
+
+
+def pool2d_patch_vjp(op: ir.OpNode, x: Array, y: Array, g: Array) -> Array:
+    """VJP of one POOL2D op over a *pre-padded* patch.
+
+    ``x`` is the pool's input with padding already applied — out-of-image
+    positions hold :func:`pool_neutral` — with spatial axes at ``(-3, -2)``;
+    ``y``/``g`` are the pool output and its cotangent at the matching output
+    extent.  Works unchanged on a halo-grown VMEM tile ``(eh, ew, C)``
+    (inside the generated nhwc backward kernel) and on padded full images
+    ``(N, Hp, Wp, C)`` (the oracle path).
+
+    Max ties follow the jax/XLA ``select_and_scatter`` convention: the first
+    maximal element in row-major window order takes the whole cotangent.
+    The neutral element never wins against real data, so halo padding gets
+    zero gradient by construction.
+    """
+    kh, kw = op.attrs["window"]
+    sh, sw = op.attrs["stride"]
+    in_h, in_w = x.shape[-3], x.shape[-2]
+    oh, ow = g.shape[-3], g.shape[-2]
+    dx = jnp.zeros(x.shape, x.dtype)
+    if op.fn == "avg":
+        c = (g / float(kh * kw)).astype(x.dtype)
+        for di in range(kh):
+            for dj in range(kw):
+                dx = dx + _offset_scatter(c, di, dj, in_h, in_w, sh, sw)
+        return dx
+    # max: route g to the first window position that attains the max.
+    taken = jnp.zeros(g.shape, bool)
+    for di in range(kh):
+        for dj in range(kw):
+            part = x[..., di: di + (oh - 1) * sh + 1: sh,
+                     dj: dj + (ow - 1) * sw + 1: sw, :]
+            sel = (part == y) & ~taken
+            taken = taken | sel
+            c = jnp.where(sel, g, 0).astype(x.dtype)
+            dx = dx + _offset_scatter(c, di, dj, in_h, in_w, sh, sw)
+    return dx
 
 
 def _row_norm_vjp(op: ir.OpNode, x: Array, ps: list[Array], g: Array,

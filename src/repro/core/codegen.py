@@ -38,7 +38,9 @@ _CODE_CACHE: dict[tuple, Executor] = {}
 def compile_plan(plan: collapse_mod.CollapsePlan, *, mode: str = "xla",
                  interpret: bool = True) -> Executor:
     """Compile a collapse plan into ``executor(inputs, params) -> outputs``."""
-    key = (plan.program.signature(), mode, interpret,
+    # plan.input_shapes keeps same-signature plans with identical tile
+    # geometry but different image extents from sharing one executor.
+    key = (plan.program.signature(), mode, interpret, plan.input_shapes,
            tuple((s.tile_rows, s.tile_out_h, s.tile_out_w)
                  for s in plan.sequences))
     cached = _CODE_CACHE.get(key)

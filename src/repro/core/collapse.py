@@ -48,6 +48,11 @@ class CollapsePlan:
     program: ir.StackProgram
     sequences: tuple[SequencePlan, ...]
     device: resource.DeviceSpec
+    # The input shapes the plan was sized against, frozen as a sorted tuple
+    # of (name, shape) pairs.  Part of codegen's cache key: two
+    # same-signature plans whose collapse chose identical tiles but over
+    # different image extents must not share one compiled executor.
+    input_shapes: tuple = ()
 
     def subprogram(self, i: int) -> ir.StackProgram:
         """Materialize sequence ``i`` as a standalone StackProgram (its
@@ -111,13 +116,13 @@ def collapse(program: ir.StackProgram,
     (1 step / 5 steps / unrestricted).
 
     ``differentiable=True`` sizes sequences against the *joint* fwd+bwd
-    working set: the generated rows backward recomputes the forward chain on
-    the resident tile with cotangent buffers live alongside, so a sequence
+    working set: the generated backward recomputes the forward chain on the
+    resident tile with cotangent buffers live alongside, so a sequence
     whose forward fits the VMEM budget may overflow it in training.  The
-    knob shrinks ``tile_rows`` and splits sequences earlier so both
-    generated kernels respect the same budget.  (nhwc sequences are
-    unaffected — their backward runs on the reference path, which
-    materializes cotangents in HBM.)
+    knob shrinks ``tile_rows`` (rows layout) or ``tile_out_h/w`` (nhwc
+    layout: recompute holds every halo level live, see
+    :func:`repro.core.resource.sequence_bwd_bytes`) and splits sequences
+    earlier so both generated kernels respect the same budget.
     """
     steps = build_steps(program)
     if program.layout == "rows":
@@ -125,8 +130,11 @@ def collapse(program: ir.StackProgram,
                           max_steps_per_sequence, differentiable)
     else:
         seqs = _pack_nhwc(program, steps, input_shapes, device, itemsize,
-                          max_steps_per_sequence)
-    return CollapsePlan(program=program, sequences=tuple(seqs), device=device)
+                          max_steps_per_sequence, differentiable)
+    return CollapsePlan(
+        program=program, sequences=tuple(seqs), device=device,
+        input_shapes=tuple(sorted((k, tuple(v))
+                                  for k, v in input_shapes.items())))
 
 
 def _pack_rows(program: ir.StackProgram, steps: list[Step],
@@ -215,22 +223,28 @@ def _resource_view(program: ir.StackProgram,
 def _pack_nhwc(program: ir.StackProgram, steps: list[Step],
                input_shapes: Mapping[str, tuple[int, ...]],
                device: resource.DeviceSpec, itemsize: int,
-               max_steps: int | None) -> list[SequencePlan]:
+               max_steps: int | None,
+               differentiable: bool = False) -> list[SequencePlan]:
     """nhwc layout (Listing 1 part 4, faithful): iterate over steps, keep a
     candidate sequence, and when its receptive-field-grown working set
     exceeds the limit, close the sequence and start a new one.  The output
     patch extent adapts downward if even a single step overflows the budget
-    (paper: tile geometry is chosen against the device's resource limit)."""
+    (paper: tile geometry is chosen against the device's resource limit).
+    With ``differentiable=True`` the working set is the joint fwd+bwd one
+    (every halo level live through the reverse sweep plus cotangents), so
+    tiles shrink and sequences split earlier than for inference plans."""
     shape = next(iter(input_shapes.values()))
     channels = shape[-1]
     out_h = out_w = 8          # output patch per grid cell (tunable)
     while out_h > 1 and not all(
-            resource.fits([s.ops], out_h, out_w, channels, itemsize, device)
+            resource.fits([s.ops], out_h, out_w, channels, itemsize, device,
+                          differentiable=differentiable)
             for s in steps):
         out_h //= 2
         out_w //= 2
     if not all(resource.fits([s.ops], out_h, out_w, channels, itemsize,
-                             device) for s in steps):
+                             device, differentiable=differentiable)
+               for s in steps):
         raise resource.ResourceError(
             f"{program.name}: single step exceeds device budget at 1x1 tile")
 
@@ -241,7 +255,7 @@ def _pack_nhwc(program: ir.StackProgram, steps: list[Step],
         over_steps = max_steps is not None and len(pending) > max_steps
         if over_steps or not resource.fits(
                 [s.ops for s in pending], out_h, out_w, channels, itemsize,
-                device):
+                device, differentiable=differentiable):
             pending.pop()                      # sequence.remove(step)
             if not pending:
                 raise resource.ResourceError(

@@ -219,10 +219,29 @@ def sequence_bytes(fps: list[StepFootprint]) -> int:
     return max(fp.bytes_in + fp.bytes_out for fp in fps)
 
 
+def sequence_bwd_bytes(fps: list[StepFootprint]) -> int:
+    """Joint fwd+bwd working set of the generated nhwc backward
+    (:mod:`repro.kernels.fused_stack.nhwc_bwd`).
+
+    The backward *recomputes* the whole chain on the resident halo tile, so
+    every level's buffer stays live for the reverse sweep (no
+    double-buffered swap — the sweep reads earlier levels back); on top the
+    sweep holds the live cotangent pair of the step being transposed.  The
+    nhwc analogue of :func:`max_live_values_bwd`: strictly larger than the
+    forward-only working set, so ``differentiable=True`` plans shrink
+    ``tile_out_h/w`` or split sequences earlier.
+    """
+    recompute = sum(fp.bytes_in for fp in fps) + fps[-1].bytes_out
+    cot_live = max(fp.bytes_in + fp.bytes_out for fp in fps)
+    return recompute + cot_live
+
+
 def fits(steps: list[tuple[ir.OpNode, ...]], out_h: int, out_w: int,
-         channels: int, itemsize: int, spec: DeviceSpec) -> bool:
+         channels: int, itemsize: int, spec: DeviceSpec,
+         *, differentiable: bool = False) -> bool:
     fps = sequence_footprint(steps, out_h, out_w, channels, itemsize, spec)
-    return sequence_bytes(fps) <= spec.resource_limit
+    need = sequence_bwd_bytes(fps) if differentiable else sequence_bytes(fps)
+    return need <= spec.resource_limit
 
 
 # ---------------------------------------------------------------------------

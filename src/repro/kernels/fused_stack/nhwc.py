@@ -20,6 +20,16 @@ own padding semantics exactly.  See ``ref.py`` for the oracle.
 Pooling inside the kernel is expressed as a static unrolled max/add over
 ``window`` shifted strided slices of the VMEM tile — ``reduce_window`` does
 not exist inside Mosaic, shifted slices map onto plain VPU ops.
+
+Beyond the single-input chain, the kernel carries *broadcast side operands*
+(extra stack inputs whose every non-channel dim is 1, e.g. a saved
+channelwise bias consumed by a residual ``EW_BINARY``): they ride along like
+parameters in ``(1, C)`` blocks, which lifts the multi-input-nhwc fallback
+for that family.  Spatially-extended extra inputs still fall back.
+
+The tile recompute (:func:`run_tile`) is shared with the generated backward
+(:mod:`repro.kernels.fused_stack.nhwc_bwd`) — one halo/mask semantics, two
+kernels.
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import collapse as collapse_mod
+from repro.core import autodiff
 from repro.core import ir
 
 
@@ -101,12 +111,72 @@ def _pool_tile(x: jnp.ndarray, op: ir.OpNode, out_h: int, out_w: int
     return acc
 
 
+def tile_valid(shape_hw: tuple[int, int], origin: tuple, level: _Level
+               ) -> jnp.ndarray:
+    """``(h, w, 1)`` bool mask: which tile positions lie inside the true
+    (unpadded) image at ``level``, given the tile's global ``origin``."""
+    rh = origin[0] + jax.lax.broadcasted_iota(jnp.int32, shape_hw, 0)
+    rw = origin[1] + jax.lax.broadcasted_iota(jnp.int32, shape_hw, 1)
+    return ((rh >= 0) & (rh < level.image_h)
+            & (rw >= 0) & (rw < level.image_w))[..., None]
+
+
+def run_tile(program: ir.StackProgram, levels: list[_Level],
+             buf: jnp.ndarray, extras: Mapping[str, jnp.ndarray],
+             params: Mapping[str, jnp.ndarray], g0h, g0w
+             ) -> tuple[dict, dict, dict, dict]:
+    """Depth-first forward of the whole op chain on one resident tile.
+
+    ``buf`` is the halo-grown input patch with global origin ``(g0h, g0w)``
+    (unpadded image coordinates); ``extras`` are broadcast side operands as
+    ``(1, 1, C)`` values.  Returns ``(env, origins, masked, valids)`` where
+    ``masked[op.name]``/``valids[op.name]`` are each pool's neutral-masked
+    input and validity mask — exactly what the backward's reverse sweep
+    needs.  Shared by the forward and backward kernels so the recompute
+    cannot drift from the forward.
+    """
+    env: dict[str, jnp.ndarray] = {program.inputs[0]: buf}
+    env.update(extras)
+    origins: dict[str, tuple] = {name: (0, 0) for name in extras}
+    origins[program.inputs[0]] = (g0h, g0w)
+    masked: dict[str, jnp.ndarray] = {}
+    valids: dict[str, jnp.ndarray] = {}
+
+    for i, op in enumerate(program.ops):
+        lv_in = levels[i]
+        lv_out = levels[i + 1]
+        if op.kind == ir.OpKind.POOL2D:
+            x = env[op.inputs[0]]
+            oh, ow = origins[op.inputs[0]]
+            # mask positions outside the true image at this level; fill with
+            # the pool's neutral element = that pool's padding semantics.
+            valid = tile_valid(x.shape[:2], (oh, ow), lv_in)
+            x = jnp.where(valid, x, autodiff.pool_neutral(x.dtype, op.fn))
+            masked[op.name] = x
+            valids[op.name] = valid
+            y = _pool_tile(x, op, lv_out.extent_h, lv_out.extent_w)
+            sh, sw = op.attrs["stride"]
+            ph, pw = op.attrs["padding"]
+            # exact by construction: origin_in = origin_out * s - p
+            origins[op.output] = ((oh + ph) // sh, (ow + pw) // sw)
+            env[op.output] = y
+        else:
+            env[op.output] = ir.apply_op(op, env, params)
+            # anchor the origin on a spatial operand (broadcast extras carry
+            # no coordinates of their own)
+            anchor = next((v for v in op.inputs if v not in extras),
+                          op.inputs[0])
+            origins[op.output] = origins[anchor]
+    return env, origins, masked, valids
+
+
 def _kernel(program: ir.StackProgram, levels: list[_Level],
-            pad_off_h: int, pad_off_w: int, n_params: int,
+            pad_off_h: int, pad_off_w: int, n_extra: int, n_params: int,
             *refs) -> None:
     src_ref = refs[0]
-    param_refs = refs[1: 1 + n_params]
-    out_ref = refs[1 + n_params]
+    extra_refs = refs[1: 1 + n_extra]
+    param_refs = refs[1 + n_extra: 1 + n_extra + n_params]
+    out_ref = refs[1 + n_extra + n_params]
 
     n = pl.program_id(0)
     pi = pl.program_id(1)
@@ -121,56 +191,27 @@ def _kernel(program: ir.StackProgram, levels: list[_Level],
     buf = src_ref[n, pl.dslice(g0h + pad_off_h, lv0.extent_h),
                   pl.dslice(g0w + pad_off_w, lv0.extent_w), :]
 
-    # (1, C) param blocks broadcast against (h, w, C) tiles.
+    # (1, C) param / broadcast-extra blocks against (h, w, C) tiles.
+    extras = {name: ref[...][None] for name, ref in
+              zip(program.inputs[1:], extra_refs)}
     params = {name: ref[...] for name, ref in
               zip(program.param_names, param_refs)}
 
-    env: dict[str, jnp.ndarray] = {program.inputs[0]: buf}
-    origins = {program.inputs[0]: (g0h, g0w)}
-    lvl_of = {program.inputs[0]: 0}
-
-    for i, op in enumerate(program.ops):
-        lv_in = levels[i]
-        lv_out = levels[i + 1]
-        if op.kind == ir.OpKind.POOL2D:
-            x = env[op.inputs[0]]
-            oh, ow = origins[op.inputs[0]]
-            # mask positions outside the true image at this level; fill with
-            # the pool's neutral element = that pool's padding semantics.
-            rh = oh + jax.lax.broadcasted_iota(jnp.int32, x.shape[:2], 0)
-            rw = ow + jax.lax.broadcasted_iota(jnp.int32, x.shape[:2], 1)
-            valid = ((rh >= 0) & (rh < lv_in.image_h)
-                     & (rw >= 0) & (rw < lv_in.image_w))[..., None]
-            neutral = (jnp.finfo(x.dtype).min if op.fn == "max"
-                       else jnp.zeros((), x.dtype))
-            x = jnp.where(valid, x, neutral)
-            y = _pool_tile(x, op, lv_out.extent_h, lv_out.extent_w)
-            sh, sw = op.attrs["stride"]
-            ph, pw = op.attrs["padding"]
-            # exact by construction: origin_in = origin_out * s - p
-            origins[op.output] = ((oh + ph) // sh, (ow + pw) // sw)
-            env[op.output] = y
-        else:
-            env[op.output] = ir.apply_op(op, env, params)
-            origins[op.output] = origins[op.inputs[0]]
-        lvl_of[op.output] = i + 1
-
+    env, _, _, _ = run_tile(program, levels, buf, extras, params, g0h, g0w)
     out_ref[...] = env[program.outputs[0]][None]
 
 
-def fused_nhwc_call(program: ir.StackProgram,
-                    x: jnp.ndarray,
-                    params: Mapping[str, jnp.ndarray],
-                    *,
-                    tile_out_h: int = 8,
-                    tile_out_w: int = 8,
-                    interpret: bool = True) -> jnp.ndarray:
-    """Run a single-input nhwc sequence as one fused Pallas kernel."""
-    if len(program.inputs) != 1:
-        raise ValueError("nhwc fused kernels support single-input stacks; "
-                         "multi-input stacks fall back to the XLA path")
+def plan_geometry(program: ir.StackProgram, x: jnp.ndarray,
+                  extras: Mapping[str, jnp.ndarray],
+                  tile_out_h: int, tile_out_w: int):
+    """Shared forward/backward geometry: levels, grid, clamped tile extents,
+    and the pre-padded input (every halo load in-bounds).  Returns
+    ``(levels, grid, xp, (left_h, left_w), (oh, ow), (pad_oh, pad_ow),
+    (th, tw))``."""
     n, h, w, c = x.shape
-    shapes = ir.infer_shapes(program, {program.inputs[0]: x.shape})
+    in_shapes = {program.inputs[0]: x.shape}
+    in_shapes.update({k: jnp.shape(v) for k, v in extras.items()})
+    shapes = ir.infer_shapes(program, in_shapes)
     _, oh, ow, _ = shapes[program.outputs[0]]
 
     th = min(tile_out_h, oh)
@@ -185,7 +226,6 @@ def fused_nhwc_call(program: ir.StackProgram,
         image_hw.append((s_[1], s_[2]))
     levels = _plan_levels(program.ops, th, tw, image_hw)
     lv0 = levels[0]
-    out_lv = levels[-1]
 
     # Pre-pad the input so every halo load is in-bounds.  Left pad covers the
     # most negative origin (off); right pad covers the last tile's reach.
@@ -195,24 +235,63 @@ def fused_nhwc_call(program: ir.StackProgram,
     right_h = max(0, last_g0h + lv0.extent_h - h)
     right_w = max(0, last_g0w + lv0.extent_w - w)
     xp = jnp.pad(x, ((0, 0), (left_h, right_h), (left_w, right_w), (0, 0)))
+    return (levels, grid, xp, (left_h, left_w), (oh, ow), (pad_oh, pad_ow),
+            (th, tw))
 
+
+def prep_extras(program: ir.StackProgram,
+                extras: Mapping[str, jnp.ndarray]) -> list[jnp.ndarray]:
+    """Broadcast side operands as (1, C) blocks (the param convention)."""
+    vals = []
+    for name in program.inputs[1:]:
+        v = jnp.asarray(extras[name])
+        vals.append(v.reshape(1, -1))
+    return vals
+
+
+def fused_nhwc_call(program: ir.StackProgram,
+                    x: jnp.ndarray,
+                    params: Mapping[str, jnp.ndarray],
+                    *,
+                    extras: Mapping[str, jnp.ndarray] | None = None,
+                    tile_out_h: int = 8,
+                    tile_out_w: int = 8,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Run an nhwc sequence as one fused Pallas kernel.
+
+    ``x`` is the spatial input (``program.inputs[0]``); ``extras`` maps any
+    remaining program inputs to broadcast side operands (every non-channel
+    dim 1).  Spatially-extended extra inputs are not supported here — the
+    dispatcher falls back to the reference path for those.
+    """
+    extras = dict(extras or {})
+    missing = [v for v in program.inputs[1:] if v not in extras]
+    if missing:
+        raise ValueError(f"{program.name}: missing extra inputs {missing}; "
+                         "spatially-extended multi-input stacks fall back "
+                         "to the XLA path")
+    n, h, w, c = x.shape
+    (levels, grid, xp, (left_h, left_w), (oh, ow), (pad_oh, pad_ow),
+     (th, tw)) = plan_geometry(program, x, extras, tile_out_h, tile_out_w)
+
+    evals = prep_extras(program, extras)
     pnames = list(program.param_names)
     pvals = [jnp.asarray(params[p]).reshape(1, -1) for p in pnames]
 
     in_specs = [pl.BlockSpec(memory_space=pl.ANY)]
     in_specs += [pl.BlockSpec((1, v.shape[-1]), lambda i, j, k: (0, 0))
-                 for v in pvals]
+                 for v in evals + pvals]
     out_spec = pl.BlockSpec((1, th, tw, c), lambda i, j, k: (i, j, k, 0))
     out_shape = jax.ShapeDtypeStruct((n, oh + pad_oh, ow + pad_ow, c), x.dtype)
 
     fn = pl.pallas_call(
         functools.partial(_kernel, program, levels, left_h, left_w,
-                          len(pvals)),
+                          len(evals), len(pvals)),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
         out_shape=out_shape,
         interpret=interpret,
     )
-    out = fn(xp, *pvals)
+    out = fn(xp, *evals, *pvals)
     return out[:, :oh, :ow, :]

@@ -4,13 +4,15 @@
 
 * mode ``brainslug``  — the generated Pallas kernels (depth-first schedule).
   Training runs depth-first end to end: the forward kernel keeps the tile
-  VMEM-resident through the op chain, and the generated backward kernel
-  (:mod:`repro.kernels.fused_stack.rows_bwd`) recomputes the chain on the
-  resident tile and applies the per-op VJP rules of
+  VMEM-resident through the op chain, and the generated backward kernels
+  (:mod:`repro.kernels.fused_stack.rows_bwd` for rows-layout chains,
+  :mod:`repro.kernels.fused_stack.nhwc_bwd` for pooling stacks) recompute
+  the chain on the resident tile and apply the per-op VJP rules of
   :mod:`repro.core.autodiff` in reverse — no reference-interpreter dispatch
-  on the rows hot path.  nhwc / multi-input stacks keep the reference
-  backward (fusion changes the schedule, not the math, so the reference VJP
-  is exact).
+  on either hot path.  nhwc stacks whose extra inputs are broadcast side
+  operands (every non-channel dim 1) run generated too; only
+  spatially-extended multi-input nhwc stacks keep the reference VJP
+  (fusion changes the schedule, not the math, so the reference is exact).
 * mode ``xla``        — jit of the interpreter (XLA fuses what it can).
 * mode ``barrier``    — per-op ``optimization_barrier`` (paper's
   breadth-first baseline; every intermediate is materialized).
@@ -29,17 +31,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import autodiff, ir
-from repro.kernels.fused_stack import nhwc, ref, rows, rows_bwd
+from repro.kernels.fused_stack import nhwc, nhwc_bwd, ref, rows, rows_bwd
 
 MODES = ("brainslug", "xla", "barrier")
 
 
 class DispatchStats:
     """Trace-time dispatch counters (the mode stat the acceptance criteria
-    ask for): which backward ran — the generated depth-first kernel or the
+    ask for): which path ran — the generated depth-first kernel or the
     reference-interpreter fallback.  Counts are incremented when the path is
     *traced*, i.e. once per compilation, which is exactly the "was the
-    generated kernel used" question."""
+    generated kernel used" question.
+
+    The instance is a process-global singleton (``STATS``); callers that
+    need isolation take a :meth:`snapshot` first and diff against it
+    (``STATS.delta(before)``) instead of asserting absolute counts —
+    benchmark drivers additionally :meth:`reset` at phase boundaries so
+    counts do not bleed across runs."""
 
     def __init__(self) -> None:
         self.reset()
@@ -53,8 +61,25 @@ class DispatchStats:
     def record(self, key: str) -> None:
         self.counts[key] += 1
 
+    def snapshot(self) -> dict[str, int]:
+        """An immutable copy of the current counts, for later diffing."""
+        return dict(self.counts)
+
+    def delta(self, before: Mapping[str, int]) -> dict[str, int]:
+        """Counts recorded since ``before`` (a :meth:`snapshot`)."""
+        return {k: v - before.get(k, 0) for k, v in self.counts.items()}
+
 
 STATS = DispatchStats()
+
+
+def is_broadcast_operand(a) -> bool:
+    """True when an nhwc side operand can ride along like a parameter: a
+    channel vector, or any shape whose every non-channel dim is 1."""
+    shape = jnp.shape(a)
+    if len(shape) == 0:
+        return False                    # scalars: keep the reference path
+    return len(shape) == 1 or all(d == 1 for d in shape[:-1])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +92,7 @@ class FusedExecutable:
     tile_out_w: int
     interpret: bool
     call: Callable[..., tuple[jnp.ndarray, ...]]   # (in_list, p_list) -> outs
-    generated_bwd: bool                            # rows depth-first backward?
+    generated_bwd: bool                            # depth-first backward?
 
 
 _EXEC_CACHE: dict[tuple, FusedExecutable] = {}
@@ -97,29 +122,37 @@ def _build_executable(program: ir.StackProgram, tile_rows: int,
                       interpret: bool) -> FusedExecutable:
     names = tuple(program.inputs)
     pnames = tuple(program.param_names)
-    rows_path = program.layout == "rows" or len(names) > 1
-    generated_bwd = (program.layout == "rows" and autodiff.supports(program))
+    is_nhwc = program.layout == "nhwc"
+    diffable = autodiff.supports(program)
+    generated_bwd = diffable and (not is_nhwc or len(program.outputs) == 1)
+
+    def _nhwc_generated(in_list) -> bool:
+        """Can this call run the generated nhwc kernels?  Shape-dependent:
+        extra inputs must be broadcast side operands."""
+        return (len(program.outputs) == 1
+                and all(is_broadcast_operand(a) for a in in_list[1:]))
 
     def _forward(in_list, p_list):
         inputs = dict(zip(names, in_list))
         params = dict(zip(pnames, p_list))
-        if rows_path:
-            if program.layout == "nhwc":
-                # multi-input nhwc stacks fall back to the XLA path
-                STATS.record("fwd_reference")
-                out = ref.fused_stack_ref(program, inputs, params)
-                return tuple(out[v] for v in program.outputs)
-            STATS.record("fwd_generated")
-            out = rows.fused_rows_call(program, inputs, params,
-                                       tile_rows=tile_rows,
-                                       interpret=interpret)
+        if is_nhwc:
+            if _nhwc_generated(in_list):
+                STATS.record("fwd_generated")
+                y = nhwc.fused_nhwc_call(
+                    program, in_list[0], params,
+                    extras=dict(zip(names[1:], in_list[1:])),
+                    tile_out_h=tile_out_h, tile_out_w=tile_out_w,
+                    interpret=interpret)
+                return (y,)
+            # spatially-extended multi-input nhwc: XLA-path fallback
+            STATS.record("fwd_reference")
+            out = ref.fused_stack_ref(program, inputs, params)
             return tuple(out[v] for v in program.outputs)
         STATS.record("fwd_generated")
-        y = nhwc.fused_nhwc_call(program, inputs[names[0]], params,
-                                 tile_out_h=tile_out_h,
-                                 tile_out_w=tile_out_w,
-                                 interpret=interpret)
-        return (y,)
+        out = rows.fused_rows_call(program, inputs, params,
+                                   tile_rows=tile_rows,
+                                   interpret=interpret)
+        return tuple(out[v] for v in program.outputs)
 
     @jax.custom_vjp
     def run(in_list, p_list):
@@ -130,10 +163,19 @@ def _build_executable(program: ir.StackProgram, tile_rows: int,
 
     def _bwd(res, g):
         in_list, p_list = res
-        if generated_bwd:
-            # Depth-first backward: recompute the chain on the VMEM tile and
-            # apply the VJP rules in reverse — one HBM read per input, one
-            # write per cotangent, grid-summed parameter grads.
+        # Depth-first backward: recompute the chain on the VMEM tile and
+        # apply the VJP rules in reverse — one HBM read per input, one
+        # write per cotangent, grid-summed parameter grads.
+        if generated_bwd and is_nhwc and _nhwc_generated(in_list):
+            STATS.record("bwd_generated")
+            dx, dextras, dparams = nhwc_bwd.fused_nhwc_bwd_call(
+                program, in_list[0], dict(zip(names[1:], in_list[1:])),
+                dict(zip(pnames, p_list)), g[0],
+                tile_out_h=tile_out_h, tile_out_w=tile_out_w,
+                interpret=interpret)
+            return ((dx,) + tuple(dextras[n] for n in names[1:]),
+                    tuple(dparams[p] for p in pnames))
+        if generated_bwd and not is_nhwc:
             STATS.record("bwd_generated")
             dins, dparams = rows_bwd.fused_rows_bwd_call(
                 program, dict(zip(names, in_list)),

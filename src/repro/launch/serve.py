@@ -63,18 +63,38 @@ class Server:
         def decode_fn(params, cache, tok):
             return lm.decode_step(params, cache, tok, cfg_, rt_)
 
+        @jax.jit
+        def prefill_fn(params, cache, tokens):
+            # One jitted dispatch for the whole prompt: position 0 seeds the
+            # carry (logit dtype/shape come from the model, not a guess),
+            # the fori_loop rolls the remaining positions inside the jit.
+            logits, cache = lm.decode_step(params, cache, tokens[:, :1],
+                                           cfg_, rt_)
+
+            def body(t, carry):
+                _, cache = carry
+                tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+                return lm.decode_step(params, cache, tok, cfg_, rt_)
+
+            return jax.lax.fori_loop(1, tokens.shape[1], body,
+                                     (logits, cache))
+
         self._decode = decode_fn
+        self._prefill = prefill_fn
 
     def prefill(self, tokens: jnp.ndarray) -> tuple[Any, jnp.ndarray]:
-        """Feed the prompt through decode steps (cache-building prefill).
-        Returns (cache, last-token logits)."""
+        """Ingest the prompt (cache-building prefill) in a single jitted
+        dispatch.  Returns (cache, last-token logits)."""
         b, s = tokens.shape
         cache = lm.init_decode_cache(self.cfg, b, self.sc.max_len,
                                      dtype=jnp.float32)
-        logits = None
-        for t in range(s):
-            logits, cache = self._decode(self.params, cache,
-                                         tokens[:, t: t + 1])
+        if s == 0:
+            # Zero-length prompts have no last-token logits; generation
+            # starts from all-zero logits (greedy decodes the pad token 0)
+            # instead of crashing on ``logits[:, 0]`` with logits = None.
+            return cache, jnp.zeros((b, self.cfg.vocab_size), jnp.float32)
+        logits, cache = self._prefill(self.params, cache,
+                                      jnp.asarray(tokens))
         return cache, logits[:, 0]
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:

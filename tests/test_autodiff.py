@@ -150,12 +150,20 @@ class TestOpRules:
             ops=(ir.OpNode(ir.OpKind.EW_UNARY, "r", ("x",), "y",
                            fn="relu"),))
         assert autodiff.supports(rows_prog)
+        # pooling chains are differentiable since the nhwc backward landed
         pool_prog = ir.StackProgram(
-            name="no", inputs=("x",), outputs=("y",), layout="nhwc",
+            name="pool", inputs=("x",), outputs=("y",), layout="nhwc",
             ops=(ir.OpNode(ir.OpKind.POOL2D, "p", ("x",), "y", fn="max",
                            attrs={"window": (2, 2), "stride": (2, 2),
                                   "padding": (0, 0)}),))
-        assert not autodiff.supports(pool_prog)
+        assert autodiff.supports(pool_prog)
+        # opaque kinds still have no VJP rule
+        opaque_prog = ir.StackProgram(
+            name="no", inputs=("x",), outputs=("y",), layout="rows",
+            ops=(ir.OpNode(ir.OpKind.MATMUL, "mm", ("x",), "y",
+                           params=("w",),
+                           attrs={"features_out": 8}),))
+        assert not autodiff.supports(opaque_prog)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,498 @@
+"""Tests for the depth-first nhwc backward: POOL2D VJP rules against
+``jax.vjp`` of the interpreter (oracle, incl. the tie convention), the
+generated halo-aware backward kernel (stride-not-tiling extents, padded
+borders, broadcast extras), executor-level gradient parity incl.
+multi-sequence nhwc splits, the joint fwd+bwd nhwc resource accounting,
+the dispatch counters (snapshot/delta), and the codegen cache key."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, autodiff, codegen, collapse, ir, resource
+from repro.kernels.fused_stack import nhwc as fs_nhwc
+from repro.kernels.fused_stack import nhwc_bwd
+from repro.kernels.fused_stack import ops as fs_ops
+from repro.kernels.fused_stack import ref as fs_ref
+
+
+@pytest.fixture(autouse=True)
+def _clear_caches():
+    codegen.clear_cache()
+    fs_ops.STATS.reset()
+    yield
+
+
+def _randn(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape, np.float32)).astype(dtype)
+
+
+def _pool_chain_program(n_blocks=2, window=(3, 3), stride=(1, 1),
+                        padding=(1, 1), fn="max"):
+    ops = []
+    v = "x"
+    for i in range(n_blocks):
+        ops += [
+            ir.OpNode(ir.OpKind.POOL2D, f"p{i}", (v,), f"pp{i}", fn=fn,
+                      attrs={"window": window, "stride": stride,
+                             "padding": padding}),
+            ir.OpNode(ir.OpKind.AFFINE, f"bn{i}", (f"pp{i}",), f"b{i}",
+                      params=(f"s{i}", f"o{i}")),
+            ir.OpNode(ir.OpKind.EW_UNARY, f"r{i}", (f"b{i}",), f"v{i}",
+                      fn="relu"),
+        ]
+        v = f"v{i}"
+    return ir.StackProgram(name="chain", inputs=("x",), outputs=(v,),
+                           ops=tuple(ops), layout="nhwc")
+
+
+def _chain_params(rng, n_blocks, channels):
+    params = {}
+    for i in range(n_blocks):
+        params[f"s{i}"] = 1.0 + 0.1 * _randn(rng, (channels,))
+        params[f"o{i}"] = 0.1 * _randn(rng, (channels,))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# POOL2D rule vs jax.vjp of the interpreter (oracle).
+# ---------------------------------------------------------------------------
+
+class TestPoolRules:
+    @pytest.mark.parametrize("fn", ["max", "avg"])
+    @pytest.mark.parametrize("window,stride,padding", [
+        ((2, 2), (2, 2), (0, 0)),       # downsampling, no halo
+        ((3, 3), (1, 1), (1, 1)),       # stride-1 halo growth
+        ((3, 3), (2, 2), (1, 1)),       # strided overlap
+    ])
+    @pytest.mark.parametrize("hw", [(8, 8), (7, 9)])
+    def test_rule_matches_jax_vjp(self, rng, fn, window, stride, padding,
+                                  hw):
+        """(7, 9) under stride 2 is not tiled exactly — the rule must not
+        invent gradient at the ragged border."""
+        op = ir.OpNode(ir.OpKind.POOL2D, "p", ("x",), "y", fn=fn,
+                       attrs={"window": window, "stride": stride,
+                              "padding": padding})
+        prog = ir.StackProgram(name="p", inputs=("x",), outputs=("y",),
+                               ops=(op,), layout="nhwc")
+        x = _randn(rng, (2, *hw, 4))
+
+        def f(x_):
+            return ir.run_program(prog, {"x": x_}, {})["y"]
+
+        y, vjp = jax.vjp(f, x)
+        g = _randn(rng, y.shape)
+        want = vjp(g)[0]
+        got = autodiff.op_vjp(op, {"x": x, "y": f(x)}, {}, g)[0]["x"]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_max_tie_convention_oracle_matched(self, rng):
+        """Exact ties: the first maximal window position (row-major order)
+        takes the whole cotangent — the jax/XLA select_and_scatter
+        convention, not an even split."""
+        op = ir.OpNode(ir.OpKind.POOL2D, "p", ("x",), "y", fn="max",
+                       attrs={"window": (3, 3), "stride": (1, 1),
+                              "padding": (1, 1)})
+        prog = ir.StackProgram(name="p", inputs=("x",), outputs=("y",),
+                               ops=(op,), layout="nhwc")
+        x = jnp.zeros((1, 5, 5, 2), jnp.float32)       # every window ties
+
+        def f(x_):
+            return ir.run_program(prog, {"x": x_}, {})["y"]
+
+        y, vjp = jax.vjp(f, x)
+        g = jnp.ones_like(y)
+        want = vjp(g)[0]
+        got = autodiff.op_vjp(op, {"x": x, "y": f(x)}, {}, g)[0]["x"]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+        # ties are routed whole, never split: integer counts
+        assert np.all(np.asarray(got) == np.round(np.asarray(got)))
+
+    def test_program_vjp_covers_pool_chain(self, rng):
+        """program_vjp (the full-array oracle sweep) handles nhwc programs
+        end to end now that POOL2D has a rule."""
+        prog = _pool_chain_program(2)
+        x = _randn(rng, (2, 9, 9, 4))
+        params = _chain_params(rng, 2, 4)
+
+        def f(x_, p_):
+            return fs_ref.fused_stack_ref(prog, {"x": x_}, p_)[
+                prog.outputs[0]]
+
+        y, vjp = jax.vjp(f, x, params)
+        g = _randn(rng, y.shape)
+        want_dx, want_dp = vjp(g)
+
+        env = {"x": x}
+        for op in prog.ops:
+            env[op.output] = ir.apply_op(op, env, params)
+        dins, dps = autodiff.program_vjp(prog, env, params,
+                                         {prog.outputs[0]: g})
+        np.testing.assert_allclose(np.asarray(dins["x"]),
+                                   np.asarray(want_dx), rtol=1e-4, atol=1e-5)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(dps[k]),
+                                       np.asarray(want_dp[k]),
+                                       rtol=1e-4, atol=1e-4, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Generated nhwc backward kernel vs jax.vjp of the reference.
+# ---------------------------------------------------------------------------
+
+class TestNhwcBwdKernel:
+    @pytest.mark.parametrize("blocks,hw,tile", [
+        (1, (8, 8), 8),
+        (2, (16, 16), 8),
+        (3, (17, 13), 4),       # tile grid does not divide the output
+    ])
+    def test_kernel_matches_reference_vjp(self, rng, blocks, hw, tile):
+        prog = _pool_chain_program(blocks)
+        x = _randn(rng, (2, *hw, 8))
+        params = _chain_params(rng, blocks, 8)
+
+        def f(x_, p_):
+            return fs_ref.fused_stack_ref(prog, {"x": x_}, p_)[
+                prog.outputs[0]]
+
+        y, vjp = jax.vjp(f, x, params)
+        g = _randn(rng, y.shape)
+        want_dx, want_dp = vjp(g)
+
+        dx, _, dparams = nhwc_bwd.fused_nhwc_bwd_call(
+            prog, x, {}, params, g, tile_out_h=tile, tile_out_w=tile)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(want_dx),
+                                   rtol=1e-4, atol=1e-5)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(dparams[k]),
+                                       np.asarray(want_dp[k]),
+                                       rtol=1e-4, atol=1e-4, err_msg=k)
+
+    @pytest.mark.parametrize("window,stride,padding,hw", [
+        ((3, 3), (2, 2), (1, 1), (20, 20)),     # strided overlap
+        ((3, 3), (2, 2), (1, 1), (11, 13)),     # stride does not tile image
+        ((2, 2), (2, 2), (0, 0), (11, 9)),      # ragged no-padding border
+    ])
+    def test_stride_and_border_geometries(self, rng, window, stride,
+                                          padding, hw):
+        """The mask edge cases `_plan_levels` documents: strides that do not
+        tile the image and padded borders must contribute exactly the
+        reference gradient (zero where the forward saw padding)."""
+        prog = _pool_chain_program(2, window, stride, padding)
+        x = _randn(rng, (2, *hw, 8))
+        params = _chain_params(rng, 2, 8)
+
+        def f(x_, p_):
+            return fs_ref.fused_stack_ref(prog, {"x": x_}, p_)[
+                prog.outputs[0]]
+
+        y, vjp = jax.vjp(f, x, params)
+        g = _randn(rng, y.shape)
+        want_dx, want_dp = vjp(g)
+        dx, _, dparams = nhwc_bwd.fused_nhwc_bwd_call(
+            prog, x, {}, params, g, tile_out_h=4, tile_out_w=4)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(want_dx),
+                                   rtol=1e-4, atol=1e-5)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(dparams[k]),
+                                       np.asarray(want_dp[k]),
+                                       rtol=1e-4, atol=1e-4, err_msg=k)
+
+    def test_avg_pool_chain(self, rng):
+        prog = _pool_chain_program(2, fn="avg")
+        x = _randn(rng, (1, 10, 10, 4))
+        params = _chain_params(rng, 2, 4)
+
+        def f(x_, p_):
+            return fs_ref.fused_stack_ref(prog, {"x": x_}, p_)[
+                prog.outputs[0]]
+
+        y, vjp = jax.vjp(f, x, params)
+        g = _randn(rng, y.shape)
+        want_dx, _ = vjp(g)
+        dx, _, _ = nhwc_bwd.fused_nhwc_bwd_call(prog, x, {}, params, g,
+                                                tile_out_h=4, tile_out_w=4)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(want_dx),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_broadcast_extra_as_first_operand(self, rng):
+        """Regression: a broadcast side operand in the *first* EW_BINARY
+        slot (div(cscale, pooled)) reduces over the tile too — without the
+        validity mask on that slot, out-of-image halo positions contribute
+        0/0 = NaN to the (1, C) gradient accumulator."""
+        prog = ir.StackProgram(
+            name="divfirst", inputs=("x", "cscale"), outputs=("v",),
+            layout="nhwc",
+            ops=(
+                ir.OpNode(ir.OpKind.POOL2D, "p", ("x",), "pp", fn="avg",
+                          attrs={"window": (3, 3), "stride": (1, 1),
+                                 "padding": (1, 1)}),
+                ir.OpNode(ir.OpKind.EW_BINARY, "d", ("cscale", "pp"), "q",
+                          fn="div"),
+                ir.OpNode(ir.OpKind.EW_UNARY, "t", ("q",), "v", fn="tanh"),
+            ))
+        x = _randn(rng, (1, 7, 7, 4)) + 3.0     # keep the div conditioned
+        cscale = _randn(rng, (4,))
+
+        def f(x_, cs_):
+            return fs_ref.fused_stack_ref(prog, {"x": x_, "cscale": cs_},
+                                          {})["v"]
+
+        y, vjp = jax.vjp(f, x, cscale)
+        g = _randn(rng, y.shape)
+        want_dx, want_dcs = vjp(g)
+        dx, dextras, _ = nhwc_bwd.fused_nhwc_bwd_call(
+            prog, x, {"cscale": cscale}, {}, g, tile_out_h=4, tile_out_w=4)
+        assert bool(jnp.all(jnp.isfinite(dextras["cscale"])))
+        np.testing.assert_allclose(np.asarray(dextras["cscale"]),
+                                   np.asarray(want_dcs),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(want_dx),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_broadcast_extra_input_fwd_and_bwd(self, rng):
+        """The lifted multi-input nhwc family: a channelwise side operand
+        consumed by an EW_BINARY rides along like a parameter in both
+        generated kernels, and its cotangent is the grid-summed reduction."""
+        prog = ir.StackProgram(
+            name="res", inputs=("x", "cbias"), outputs=("v",), layout="nhwc",
+            ops=(
+                ir.OpNode(ir.OpKind.POOL2D, "p", ("x",), "pp", fn="max",
+                          attrs={"window": (3, 3), "stride": (1, 1),
+                                 "padding": (1, 1)}),
+                ir.OpNode(ir.OpKind.EW_BINARY, "addb", ("pp", "cbias"),
+                          "ab", fn="add"),
+                ir.OpNode(ir.OpKind.EW_UNARY, "act", ("ab",), "v",
+                          fn="silu"),
+            ))
+        x = _randn(rng, (2, 9, 7, 8))
+        cbias = _randn(rng, (8,))
+
+        y_k = fs_nhwc.fused_nhwc_call(prog, x, {}, extras={"cbias": cbias},
+                                      tile_out_h=4, tile_out_w=4)
+        want_y = fs_ref.fused_stack_ref(prog, {"x": x, "cbias": cbias},
+                                        {})["v"]
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(want_y),
+                                   rtol=1e-5, atol=1e-5)
+
+        def f(x_, cb_):
+            return fs_ref.fused_stack_ref(prog, {"x": x_, "cbias": cb_},
+                                          {})["v"]
+
+        y, vjp = jax.vjp(f, x, cbias)
+        g = _randn(rng, y.shape)
+        want_dx, want_dcb = vjp(g)
+        dx, dextras, _ = nhwc_bwd.fused_nhwc_bwd_call(
+            prog, x, {"cbias": cbias}, {}, g, tile_out_h=4, tile_out_w=4)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(want_dx),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dextras["cbias"]),
+                                   np.asarray(want_dcb),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Executor-level parity + dispatch counters.
+# ---------------------------------------------------------------------------
+
+def _stride2_block_graph(n_blocks=2, channels=8):
+    """Pooling-stack NetGraph whose stride does not tile odd image extents."""
+    ops = []
+    v = "x"
+    for i in range(n_blocks):
+        ops += [
+            ir.OpNode(ir.OpKind.POOL2D, f"pool{i}", (v,), f"p{i}", fn="max",
+                      attrs={"window": (3, 3), "stride": (2, 2) if i == 0
+                             else (1, 1), "padding": (1, 1)}),
+            ir.OpNode(ir.OpKind.AFFINE, f"bn{i}", (f"p{i}",), f"b{i}",
+                      params=(f"bn{i}_s", f"bn{i}_o")),
+            ir.OpNode(ir.OpKind.EW_UNARY, f"relu{i}", (f"b{i}",), f"r{i}",
+                      fn="relu"),
+        ]
+        v = f"r{i}"
+    return ir.NetGraph(name="s2blocks", input="x", output=v, ops=tuple(ops))
+
+
+class TestTrainingDispatch:
+    def test_optimize_graph_training_step_generated_bwd(self, rng):
+        """Acceptance criterion: a jax.grad training step through an
+        optimize_graph pooling stack (mode=brainslug, differentiable=True)
+        records bwd_generated — not bwd_reference — and matches the
+        xla-path gradients to fp32 tolerance, on an image extent the
+        stride does not tile (11x13 under stride 2)."""
+        graph = _stride2_block_graph(2, channels=8)
+        x = _randn(rng, (2, 11, 13, 8))
+        params = {}
+        for i in range(2):
+            params[f"bn{i}_s"] = 1.0 + 0.1 * _randn(rng, (8,))
+            params[f"bn{i}_o"] = 0.1 * _randn(rng, (8,))
+
+        nets = {m: api.optimize_graph(
+                    graph, x.shape,
+                    api.OptimizeConfig(mode=m, differentiable=True))
+                for m in ("brainslug", "xla")}
+
+        def loss(mode, p):
+            return jnp.sum(jnp.square(nets[mode](x, p)))
+
+        before = fs_ops.STATS.snapshot()
+        gb = jax.grad(lambda p: loss("brainslug", p))(params)
+        delta = fs_ops.STATS.delta(before)
+        assert delta["bwd_generated"] >= 1
+        assert delta["bwd_reference"] == 0
+
+        gx = jax.grad(lambda p: loss("xla", p))(params)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(gb[k]), np.asarray(gx[k]),
+                                       rtol=1e-4, atol=1e-4, err_msg=k)
+
+    def test_multi_sequence_nhwc_split_parity(self, rng):
+        """On the tiny budget a deep pooling chain splits into several nhwc
+        sequences; gradients must still match the xla reference and every
+        sequence must dispatch the generated backward."""
+        prog = _pool_chain_program(4)
+        x = _randn(rng, (1, 12, 12, 8))
+        params = _chain_params(rng, 4, 8)
+        shapes = {"x": x.shape}
+
+        plan = collapse.collapse(prog, shapes, resource.TINY_DEVICE,
+                                 itemsize=4, differentiable=True)
+        assert len(plan.sequences) > 1          # the split actually happened
+
+        def loss(mode, device, p):
+            exe = api.optimize_stack(
+                prog, shapes, api.OptimizeConfig(mode=mode, device=device,
+                                                 differentiable=True))
+            out = exe({"x": x}, p)
+            return jnp.sum(jnp.square(out[prog.outputs[0]]))
+
+        before = fs_ops.STATS.snapshot()
+        gb = jax.grad(lambda p: loss("brainslug", resource.TINY_DEVICE,
+                                     p))(params)
+        delta = fs_ops.STATS.delta(before)
+        assert delta["bwd_generated"] >= 2
+        assert delta["bwd_reference"] == 0
+
+        gx = jax.grad(lambda p: loss("xla", resource.TPU_V5E, p))(params)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(gb[k]), np.asarray(gx[k]),
+                                       rtol=1e-4, atol=1e-4, err_msg=k)
+
+    def test_spatial_multi_input_still_reference(self, rng):
+        """A spatially-extended second input (a real residual) cannot ride
+        the generated nhwc kernels — the dispatcher must keep the exact
+        reference path, recorded as fwd/bwd_reference."""
+        prog = ir.StackProgram(
+            name="spatres", inputs=("x", "res"), outputs=("v",),
+            layout="nhwc",
+            ops=(
+                ir.OpNode(ir.OpKind.POOL2D, "p", ("x",), "pp", fn="max",
+                          attrs={"window": (3, 3), "stride": (1, 1),
+                                 "padding": (1, 1)}),
+                ir.OpNode(ir.OpKind.EW_BINARY, "add", ("pp", "res"), "v",
+                          fn="add"),
+            ))
+        x = _randn(rng, (1, 8, 8, 8))
+        res = _randn(rng, (1, 8, 8, 8))
+
+        def loss(mode):
+            out = fs_ops.fused_stack_apply(prog, {"x": x, "res": res}, {},
+                                           mode=mode)
+            return jnp.sum(jnp.square(out["v"]))
+
+        before = fs_ops.STATS.snapshot()
+        gb = jax.grad(lambda x_: jnp.sum(jnp.square(
+            fs_ops.fused_stack_apply(prog, {"x": x_, "res": res}, {},
+                                     mode="brainslug")["v"])))(x)
+        delta = fs_ops.STATS.delta(before)
+        assert delta["fwd_reference"] >= 1
+        assert delta["bwd_reference"] >= 1
+        assert delta["bwd_generated"] == 0
+        gx = jax.grad(lambda x_: jnp.sum(jnp.square(
+            fs_ops.fused_stack_apply(prog, {"x": x_, "res": res}, {},
+                                     mode="xla")["v"])))(x)
+        np.testing.assert_allclose(np.asarray(gb), np.asarray(gx),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_snapshot_delta_isolation(self, rng):
+        """snapshot()/delta() isolate phases without resetting the global
+        counters underneath concurrent readers."""
+        prog = _pool_chain_program(1)
+        x = _randn(rng, (1, 8, 8, 8))
+        params = _chain_params(rng, 1, 8)
+        fs_ops.fused_stack_apply(prog, {"x": x}, params, mode="brainslug")
+        mid = fs_ops.STATS.snapshot()
+        assert mid["fwd_generated"] >= 1
+        fs_ops.fused_stack_apply(prog, {"x": x}, params, mode="brainslug")
+        delta = fs_ops.STATS.delta(mid)
+        assert delta["fwd_generated"] >= 1
+        # the snapshot itself is untouched by later records
+        assert mid["fwd_generated"] < fs_ops.STATS.counts["fwd_generated"]
+
+
+# ---------------------------------------------------------------------------
+# Joint fwd+bwd nhwc resource accounting.
+# ---------------------------------------------------------------------------
+
+class TestNhwcJointBudget:
+    def test_bwd_bytes_exceed_fwd_bytes(self):
+        prog = _pool_chain_program(3)
+        steps = [s.ops for s in collapse.build_steps(prog)]
+        fps = resource.sequence_footprint(steps, 8, 8, 32, 4,
+                                          resource.TPU_V5E)
+        assert (resource.sequence_bwd_bytes(fps)
+                > resource.sequence_bytes(fps))
+
+    def test_differentiable_tile_never_larger(self):
+        """differentiable=True sizes nhwc plans against the joint working
+        set: the output patch shrinks (or stays) relative to the
+        inference plan on the same budget."""
+        prog = _pool_chain_program(3)
+        shapes = {"x": (1, 32, 32, 32)}
+        dev = resource.DeviceSpec(name="small", vmem_bytes=512 * 1024,
+                                  vmem_budget_fraction=1.0)
+        fwd_plan = collapse.collapse(prog, shapes, dev, itemsize=4)
+        joint_plan = collapse.collapse(prog, shapes, dev, itemsize=4,
+                                       differentiable=True)
+        assert (joint_plan.sequences[0].tile_out_h
+                <= fwd_plan.sequences[0].tile_out_h)
+        assert (joint_plan.sequences[0].tile_out_h
+                < fwd_plan.sequences[0].tile_out_h) or (
+            len(joint_plan.sequences) >= len(fwd_plan.sequences))
+
+    def test_differentiable_plan_splits_earlier(self):
+        prog = _pool_chain_program(4)
+        shapes = {"x": (1, 12, 12, 8)}
+        fwd_plan = collapse.collapse(prog, shapes, resource.TINY_DEVICE,
+                                     itemsize=4)
+        joint_plan = collapse.collapse(prog, shapes, resource.TINY_DEVICE,
+                                       itemsize=4, differentiable=True)
+        assert len(joint_plan.sequences) >= len(fwd_plan.sequences)
+        # and the joint plan respects the joint budget sequence by sequence
+        for i, seq in enumerate(joint_plan.sequences):
+            steps = [s.ops for s in seq.steps]
+            assert resource.fits(steps, seq.tile_out_h, seq.tile_out_w,
+                                 8, 4, resource.TINY_DEVICE,
+                                 differentiable=True)
+
+
+# ---------------------------------------------------------------------------
+# codegen cache key: image extents are part of the key.
+# ---------------------------------------------------------------------------
+
+class TestCodegenCacheKey:
+    def test_same_signature_different_extents_not_shared(self):
+        prog = _pool_chain_program(2)
+        plan_a = collapse.collapse(prog, {"x": (1, 16, 16, 8)},
+                                   resource.TPU_V5E, itemsize=4)
+        plan_b = collapse.collapse(prog, {"x": (1, 32, 32, 8)},
+                                   resource.TPU_V5E, itemsize=4)
+        assert plan_a.program.signature() == plan_b.program.signature()
+        exe_a = codegen.compile_plan(plan_a, mode="xla")
+        exe_b = codegen.compile_plan(plan_b, mode="xla")
+        assert exe_a is not exe_b
+        # same plan twice still hits the cache
+        assert codegen.compile_plan(plan_a, mode="xla") is exe_a

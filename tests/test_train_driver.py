@@ -89,3 +89,14 @@ class TestServe:
     def test_encoder_arch_rejected(self):
         with pytest.raises(ValueError, match="encoder-only"):
             Server(ServeConfig(arch="hubert-xlarge"))
+
+    def test_zero_length_prompt_does_not_crash(self):
+        """Prefill of an empty prompt used to die on ``logits[:, 0]`` with
+        ``logits = None``; generation now starts from zero logits (greedy
+        decodes the pad token first)."""
+        sc = ServeConfig(arch="deepseek-7b", batch=2, prompt_len=0,
+                         new_tokens=3, max_len=8)
+        server = Server(sc)
+        gen = server.generate(np.zeros((2, 0), np.int32))
+        assert gen.shape == (2, 3)
+        assert (gen[:, 0] == 0).all()
