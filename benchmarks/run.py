@@ -4,6 +4,7 @@
   table2   full-network census + schedule speed-up (CNN zoo + LM archs)
   fig15    batch-size scaling of the schedule effect
   roofline three-term roofline per dry-run cell (needs results/dryrun)
+  serve    continuous-batching engine vs static batching throughput
 
 ``python -m benchmarks.run`` runs everything with CPU-sized defaults and
 writes CSVs under results/bench/.
@@ -20,7 +21,8 @@ from benchmarks import common
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("benches", nargs="*",
-                    default=["fig10", "table2", "fig15", "roofline"])
+                    default=["fig10", "table2", "fig15", "roofline",
+                             "serve"])
     ap.add_argument("--quick", action="store_true",
                     help="smaller grids (CI mode)")
     args = ap.parse_args(argv)
@@ -44,6 +46,12 @@ def main(argv=None) -> int:
         elif bench == "roofline":
             from benchmarks import roofline_report as m
             m.run()
+        elif bench == "serve":
+            from benchmarks import serve_throughput as m
+            if args.quick:
+                m.run(**m.QUICK_KWARGS)
+            else:
+                m.run()
         else:
             print(f"unknown bench {bench!r}", file=sys.stderr)
             return 2

@@ -1,16 +1,17 @@
-"""Batched serving example: prefill a batch of prompts, then decode with
-the same ``decode_step`` the production dry-run lowers (KV/SSM caches,
-greedy or sampled, per-request stop lengths).
+"""Continuous-batching serving example: a queue of ragged requests through
+the slot-managed engine (``Engine.run``), with the fixed static loop as a
+baseline (``--static``).
 
     PYTHONPATH=src python examples/serve_batch.py --arch qwen2.5-14b
     PYTHONPATH=src python examples/serve_batch.py --arch mamba2-2.7b \
-        --mode brainslug
+        --mode brainslug --slots 2
 """
 import argparse
 import time
 
 import numpy as np
 
+from repro.launch.engine import Request
 from repro.launch.serve import ServeConfig, Server
 
 
@@ -19,33 +20,64 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen2.5-14b")
     ap.add_argument("--mode", default="xla",
                     choices=["brainslug", "xla", "barrier"])
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--static", action="store_true",
+                    help="run the static lock-step loop instead")
     args = ap.parse_args()
 
-    sc = ServeConfig(arch=args.arch, mode=args.mode, batch=args.batch,
+    sc = ServeConfig(arch=args.arch, mode=args.mode, batch=args.slots,
                      prompt_len=args.prompt_len, new_tokens=args.new_tokens,
                      max_len=args.prompt_len + args.new_tokens + 1,
                      temperature=args.temperature)
     server = Server(sc)
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, server.cfg.vocab_size,
-                           (sc.batch, sc.prompt_len)).astype(np.int32)
-    # vary request lengths: continuous-batching slot semantics
-    stops = rng.integers(sc.new_tokens // 2, sc.new_tokens + 1,
-                         (sc.batch,))
 
+    if args.static:
+        prompts = rng.integers(0, server.cfg.vocab_size,
+                               (sc.batch, sc.prompt_len)).astype(np.int32)
+        stops = rng.integers(sc.new_tokens // 2, sc.new_tokens + 1,
+                             (sc.batch,))
+        t0 = time.time()
+        gen = server.generate(prompts, stop_lengths=stops)
+        dt = time.time() - t0
+        print(f"[static] {sc.batch} requests in {dt:.2f}s "
+              f"({server.last_stats.decode_slot_steps} decode slot-steps)")
+        for i in range(sc.batch):
+            print(f"  request {i} (stop={stops[i]:2d}): "
+                  f"{gen[i, : stops[i]].tolist()}")
+        return
+
+    # ragged traffic: mixed prompt lengths AND mixed stop lengths — the
+    # continuous-batching case (a freed slot immediately admits the next
+    # queued request; prefill chunks share dispatches with decode)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(1, sc.prompt_len + 1))
+        reqs.append(Request(
+            request_id=i,
+            prompt=rng.integers(0, server.cfg.vocab_size,
+                                (plen,)).astype(np.int32),
+            max_new_tokens=int(rng.integers(sc.new_tokens // 2,
+                                            sc.new_tokens + 1)),
+            temperature=args.temperature))
+
+    engine = server.engine(slots=args.slots)
     t0 = time.time()
-    gen = server.generate(prompts, stop_lengths=stops)
+    completions = engine.run(reqs)
     dt = time.time() - t0
-    print(f"arch={args.arch} mode={args.mode}")
-    print(f"{sc.batch} requests, prompt={sc.prompt_len}, "
-          f"up to {sc.new_tokens} new tokens in {dt:.2f}s")
-    for i in range(sc.batch):
-        toks = gen[i, : stops[i]].tolist()
-        print(f"  request {i} (stop={stops[i]:2d}): {toks}")
+    s = engine.last_stats
+    print(f"arch={args.arch} mode={args.mode} slots={args.slots}")
+    print(f"[engine] {len(reqs)} requests in {dt:.2f}s: "
+          f"{s.generated_tokens} tokens, {s.step_dispatches} dispatches, "
+          f"{s.decode_slot_steps} decode slot-steps, "
+          f"slot utilization {s.slot_utilization:.2f}")
+    for c in completions:
+        print(f"  request {c.request_id} (prompt={c.prompt_len:2d}, "
+              f"stop={len(c.tokens):2d}): {c.tokens.tolist()}")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,61 @@ class StackStats:
         return self.n_ops_optimized / max(self.n_ops_total, 1)
 
 
+@dataclasses.dataclass
+class ServeStats:
+    """Serving-driver execution counters (the serving analogue of
+    :class:`StackStats`): how many jitted dispatches a generation run
+    issued and how much of the dispatched slot-token work was useful.
+
+    ``decode_slot_steps`` is the headline continuous-batching metric — one
+    unit is one batch slot pushed through one decode dispatch.  The static
+    driver dispatches *every* slot every step (finished requests cycle pad
+    tokens), the engine only counts slots holding a live decoding request,
+    so at equal traffic the engine's number is strictly smaller whenever
+    stop lengths are ragged."""
+
+    n_requests: int = 0
+    n_slots: int = 0
+    step_dispatches: int = 0        # jitted step invocations (all phases)
+    prefill_tokens: int = 0         # prompt tokens ingested (live slots)
+    generated_tokens: int = 0       # tokens actually emitted to requests
+    decode_slot_steps: int = 0      # slot-units of decode dispatch work
+    padded_decode_slot_steps: int = 0  # subset of decode_slot_steps that
+    # only cycled a pad token for an already-finished request (the static
+    # loop's waste; 0 for the engine, whose finished slots go idle/refill)
+    idle_slot_steps: int = 0        # lane-evaluation units that consumed no
+    # token: empty lanes, plus the dead sub-steps live lanes ride in a
+    # mixed window (the engine's step runs max(counts) model evaluations
+    # over every lane)
+    admitted: int = 0
+    completed: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefill_tokens + self.generated_tokens
+
+    @property
+    def generated_tokens_per_s(self) -> float:
+        return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def slot_utilization(self) -> float:
+        """Useful fraction of the dispatched slot-token work: pad-cycling
+        decode units and empty lanes both count as waste."""
+        total = (self.prefill_tokens + self.decode_slot_steps
+                 + self.idle_slot_steps)
+        useful = (self.prefill_tokens + self.decode_slot_steps
+                  - self.padded_decode_slot_steps)
+        return useful / max(total, 1)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["generated_tokens_per_s"] = self.generated_tokens_per_s
+        d["slot_utilization"] = self.slot_utilization
+        return d
+
+
 class Scheduler:
     """Runs an OptimizedNet; caches the jitted callable per net identity."""
 

@@ -5,7 +5,16 @@ the only thing that matters is touching each cache block exactly once.  The
 kernel streams ``(block_k, d)`` cache tiles through VMEM, maintains the
 online softmax state in scratch, and emits the output after the last tile.
 A per-batch ``length`` operand masks the unwritten tail of the cache, so
-one compiled kernel serves every decode position.
+one compiled kernel serves every decode position — and because it is
+per-batch, one dispatch serves a *ragged* batch of slots (the continuous-
+batching engine drives every slot at its own position).
+
+Empty-slot convention: ``lengths == 0`` (a freed / not-yet-admitted cache
+slot) means the softmax is taken over zero keys.  The kernel emits exactly
+zero output for such rows instead of NaN or a stale-cache average: the
+running max ``m`` only leaves its -inf seed when a valid key is seen, so
+finalization can mask rows whose softmax was empty.  The jnp reference
+(`ref.attention_ref`) implements the same convention.
 """
 from __future__ import annotations
 
@@ -51,7 +60,11 @@ def _kernel(scale: float, block_k: int,
 
     @pl.when(j == nk - 1)
     def _finalize():
-        o_ref[0, 0] = (acc_ref[...] /
+        # m never left its NEG_INF seed <=> every key was masked (length 0).
+        # The l/acc state is then exp(0)-polluted garbage; emit zeros.
+        valid = m_ref[...] > NEG_INF * 0.5
+        acc = jnp.where(valid, acc_ref[...], 0.0)
+        o_ref[0, 0] = (acc /
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 

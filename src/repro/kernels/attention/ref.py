@@ -37,6 +37,12 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         off = 0 if lengths is not None else sk - sq
         s = jnp.where(k_idx <= q_idx + off, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    if lengths is not None:
+        # Empty-softmax convention (matches the flash-decode kernel): a
+        # fully-masked row — length 0, a freed continuous-batching slot —
+        # attends over zero keys and outputs exactly zero, not the uniform
+        # average softmax(-inf, ..., -inf) would produce.
+        p = jnp.where(lengths[:, None, None, None, None] > 0, p, 0.0)
     # cast the q-side (p) down rather than the cache-side (v) up: p is the
     # smaller tensor on the decode path where v is the whole KV cache
     o = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v.dtype), v,

@@ -47,19 +47,30 @@ class DispatchStats:
     need isolation take a :meth:`snapshot` first and diff against it
     (``STATS.delta(before)``) instead of asserting absolute counts —
     benchmark drivers additionally :meth:`reset` at phase boundaries so
-    counts do not bleed across runs."""
+    counts do not bleed across runs.
 
-    def __init__(self) -> None:
+    The class is key-set agnostic so other dispatch surfaces can reuse the
+    snapshot/delta protocol: the serving drivers instantiate their own
+    counters (``repro.launch.serve.STATS`` / ``repro.launch.engine.STATS``)
+    with *runtime* dispatch keys — there the counts are per call, not per
+    trace, because "how many decode dispatches did the loop issue" is the
+    question those counters answer."""
+
+    BASE_KEYS = ("fwd_generated", "fwd_reference",
+                 "bwd_generated", "bwd_reference")
+
+    def __init__(self, keys: tuple[str, ...] = BASE_KEYS) -> None:
+        self._keys = tuple(keys)
         self.reset()
 
     def reset(self) -> None:
-        self.counts: dict[str, int] = {
-            "fwd_generated": 0, "fwd_reference": 0,
-            "bwd_generated": 0, "bwd_reference": 0,
-        }
+        self.counts: dict[str, int] = {k: 0 for k in self._keys}
 
-    def record(self, key: str) -> None:
-        self.counts[key] += 1
+    def record(self, key: str, n: int = 1) -> None:
+        if key not in self.counts:
+            raise KeyError(
+                f"unknown dispatch counter {key!r}; declared: {self._keys}")
+        self.counts[key] += n
 
     def snapshot(self) -> dict[str, int]:
         """An immutable copy of the current counts, for later diffing."""

@@ -1,0 +1,347 @@
+"""Continuous-batching serve engine: slot-managed KV cache, one jitted
+mixed prefill/decode step.
+
+The static driver (``launch/serve.py``) is breadth-first serving: a batch
+marches in lock-step, every dispatch sweeps all slots, and finished
+requests cycle pad tokens until the longest request stops.  This engine is
+the depth-first counterpart at the *scheduler* level — the working set the
+engine keeps resident is the set of live requests:
+
+* **Slots.**  The KV/SSM cache has ``slots`` batch rows.  A request is
+  admitted into a free slot, generates, and on completion the slot is
+  reset (``lm.reset_slots``) and immediately refilled from the queue.
+* **One compiled callable.**  Every dispatch runs the same jitted mixed
+  step over a ``(slots, chunk)`` token window: a prefilling slot consumes
+  up to ``chunk`` prompt tokens, a decoding slot consumes the one token it
+  sampled last step, an empty slot rides along inert.  Per-slot ``active``
+  masks (threaded through ``lm.decode_step`` down to the per-slot
+  ``lengths`` operand of the flash-decode kernel) freeze the cache state
+  of lanes that are not consuming a token, so mixed batches never corrupt
+  each other — there is no separate prefill executable to compile or to
+  serialize the pipeline on.
+* **Per-request sampling state.**  Temperature, stop length and the RNG
+  lane travel with the request, not the batch: request ``r`` samples its
+  ``i``-th token with ``fold_in(fold_in(run_key, r.request_id), i)``, so a
+  generation is reproducible regardless of which slot it landed in or what
+  traffic it shared the batch with.
+
+Dispatch accounting lives in two places: ``STATS`` (a runtime-keyed
+:class:`~repro.kernels.fused_stack.ops.DispatchStats`, snapshot/delta
+protocol) and the per-run :class:`~repro.core.scheduler.ServeStats`
+returned via :attr:`Engine.last_stats`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RuntimeConfig
+from repro.core.scheduler import ServeStats
+from repro.kernels.fused_stack.ops import DispatchStats
+from repro.models import lm
+
+STATS = DispatchStats(keys=(
+    "mixed_step",          # jitted mixed-step invocations
+    "slot_reset",          # jitted slot-reset invocations
+    "prefill_tokens",      # prompt tokens ingested by live slots
+    "decode_slot_steps",   # slot-units of decode dispatch work
+    "idle_slot_steps",     # lane-evaluation units that consumed no token
+))
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.  ``request_id`` seeds the RNG lane (reuse an
+    id and you reuse its sample stream); ``max_new_tokens`` is the stop
+    length; ``temperature <= 0`` is greedy."""
+    request_id: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    request_id: int
+    prompt_len: int
+    tokens: np.ndarray          # (max_new_tokens,) int32
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side per-slot request state."""
+    idx: int                    # position in the submitted request list
+    req: Request
+    prompt: np.ndarray          # validated (P,) int32
+    pos: int = 0                # prompt tokens consumed so far
+    gen: list[int] = dataclasses.field(default_factory=list)
+    last: int = 0               # decode input: the token sampled last step
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_mixed_step(cfg: ModelConfig, rt: RuntimeConfig):
+    """One jitted mixed prefill/decode step, cached per (cfg, rt) so every
+    Engine over the same model shares one trace cache (the step depends on
+    the token-window *shape*, not on any per-engine state)."""
+    vocab = cfg.vocab_size
+
+    def mixed_step(params, cache, tokens, counts, rids, tidx, temps,
+                   base_key):
+        """tokens (B, C); counts/rids/tidx (B,) i32; temps (B,) f32.
+
+        Slot b consumes tokens[b, :counts[b]] (0 = idle lane); returns
+        the token each slot samples from its last consumed position."""
+        def body(t, carry):
+            logits_last, cache = carry
+            active = t < counts
+            tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+            logits, cache = lm.decode_step(params, cache, tok, cfg, rt,
+                                           active)
+            logits_last = jnp.where(active[:, None],
+                                    logits[:, 0].astype(jnp.float32),
+                                    logits_last)
+            return logits_last, cache
+
+        logits0 = jnp.zeros((tokens.shape[0], vocab), jnp.float32)
+        # traced trip count (lowers to a while_loop): in decode-only
+        # steady state max(counts) == 1, so the step does one model
+        # evaluation, not C — dead all-inactive iterations would multiply
+        # every generated token's cost by the window width
+        logits_last, cache = jax.lax.fori_loop(
+            0, jnp.max(counts), body, (logits0, cache))
+
+        def sample_row(logits, rid, ti, temp):
+            key = jax.random.fold_in(jax.random.fold_in(base_key, rid),
+                                     ti)
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            samp = jax.random.categorical(
+                key, logits / jnp.maximum(temp, 1e-6)).astype(jnp.int32)
+            return jnp.where(temp > 0.0, samp, greedy)
+
+        nxt = jax.vmap(sample_row)(logits_last, rids, tidx, temps)
+        return nxt, cache
+
+    # the cache is donated: run() rebinds it from the step's return, and
+    # in place the per-slot where-select KV write stays a masked update
+    # instead of a full cache copy per token (no-op warning on CPU)
+    return jax.jit(mixed_step, donate_argnums=(1,))
+
+
+# Slot recycling rewrites one batch column of every cache leaf; donating
+# the old cache lets XLA do it in place instead of copying the full
+# KV/SSM state per admission (donation is a no-op warning on CPU).
+_jitted_reset = jax.jit(lm.reset_slots, donate_argnums=0)
+
+
+class Engine:
+    """Continuous-batching generation over a fixed slot pool.
+
+    ``Engine.run(requests)`` admits the queue into ``slots`` cache rows and
+    drives the single jitted mixed step until every request has completed;
+    it returns one :class:`Completion` per request, in submission order.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, rt: RuntimeConfig, *,
+                 slots: int, max_len: int, prefill_chunk: int = 8,
+                 seed: int = 0):
+        if not cfg.supports_decode:
+            raise ValueError(f"{cfg.name} is encoder-only; no decode path")
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt
+        self.slots = slots
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.seed = seed
+        self.last_stats: ServeStats | None = None
+        self._n_runs = 0
+        self._step = _jitted_mixed_step(cfg, rt)
+        self._reset = _jitted_reset
+
+    # -- admission ----------------------------------------------------------
+
+    def _validate(self, r: Request) -> np.ndarray:
+        prompt = np.asarray(r.prompt, np.int32)
+        if prompt.ndim > 1:
+            raise ValueError(
+                f"request {r.request_id}: prompt must be a 1-D token "
+                f"sequence, got shape {tuple(prompt.shape)} (one Request "
+                f"per row — the engine batches across requests itself)")
+        prompt = prompt.reshape(-1)
+        if r.max_new_tokens < 0:
+            raise ValueError(
+                f"request {r.request_id}: max_new_tokens must be >= 0")
+        total = len(prompt) + r.max_new_tokens
+        if total > self.max_len:
+            raise ValueError(
+                f"request {r.request_id}: prompt_len + max_new_tokens = "
+                f"{len(prompt)} + {r.max_new_tokens} = {total} exceeds the "
+                f"cache max_len = {self.max_len}; the generation would "
+                f"write past the end of its KV-cache slot")
+        return prompt
+
+    def _first_token_from_zero_logits(self, req: Request, run_key) -> int:
+        """Empty prompt: there is no last-prompt-position logit, so the
+        first token is sampled from all-zero logits (greedy decodes the
+        pad token 0; temperature samples the uniform distribution) — the
+        same convention as the static driver's empty-prompt prefill."""
+        if req.temperature <= 0.0:
+            return 0
+        key = jax.random.fold_in(
+            jax.random.fold_in(run_key, req.request_id), 0)
+        return int(jax.random.categorical(
+            key, jnp.zeros((self.cfg.vocab_size,), jnp.float32)))
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, requests: Sequence[Request],
+            key: jnp.ndarray | None = None) -> list[Completion]:
+        """Serve every request to completion; returns completions in
+        submission order.  ``key`` overrides the per-run RNG key (default:
+        ``fold_in(PRNGKey(seed), run_counter)`` so repeated runs with
+        temperature sampling draw fresh streams)."""
+        prompts = [self._validate(r) for r in requests]
+        if key is None:
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                     self._n_runs)
+        self._n_runs += 1
+
+        B, C = self.slots, self.prefill_chunk
+        queue: collections.deque = collections.deque(
+            (i, r, p) for i, (r, p) in enumerate(zip(requests, prompts)))
+        completions: list[Completion | None] = [None] * len(requests)
+        stats = ServeStats(n_requests=len(requests), n_slots=B)
+        slot: list[_Slot | None] = [None] * B
+        dirty = [False] * B             # slot held a previous request
+        # plain list, not an ndarray: the mask handed to the jitted reset
+        # must be a fresh buffer every time (np.asarray(list) copies).
+        # jnp.asarray of a live numpy array can alias its memory zero-copy
+        # on CPU, and the async reset may read it only after the host loop
+        # has moved on — mutating a passed-in mask in place intermittently
+        # turned it all-False and left the freed slot's cache stale.
+        pending_reset = [False] * B
+        cache = lm.init_decode_cache(self.cfg, B, self.max_len,
+                                     dtype=jnp.float32)
+        t0 = time.perf_counter()
+
+        def complete(s_idx: int, req: Request, prompt, gen) -> None:
+            completions[s_idx] = Completion(
+                request_id=req.request_id, prompt_len=len(prompt),
+                tokens=np.asarray(gen, np.int32))
+            stats.completed += 1
+
+        def admit() -> None:
+            for b in range(B):
+                while slot[b] is None and queue:
+                    idx, req, prompt = queue.popleft()
+                    stats.admitted += 1
+                    if req.max_new_tokens == 0:
+                        complete(idx, req, prompt, [])
+                        continue
+                    gen: list[int] = []
+                    last = 0
+                    if len(prompt) == 0:
+                        tok0 = self._first_token_from_zero_logits(req, key)
+                        gen = [tok0]
+                        stats.generated_tokens += 1
+                        if req.max_new_tokens == 1:
+                            complete(idx, req, prompt, gen)
+                            continue
+                        last = tok0
+                    if dirty[b]:
+                        pending_reset[b] = True
+                        dirty[b] = False
+                    slot[b] = _Slot(idx=idx, req=req, prompt=prompt,
+                                    gen=gen, last=last)
+
+        while True:
+            admit()
+            if any(pending_reset):
+                # jitted per-slot cache clear: freed slots restart at
+                # length 0 / zero SSM state before their new request's
+                # first prefill chunk
+                cache = self._reset(
+                    cache, jnp.asarray(np.asarray(pending_reset)))
+                STATS.record("slot_reset")
+                pending_reset = [False] * B
+            if all(s is None for s in slot):
+                break
+
+            tokens = np.zeros((B, C), np.int32)
+            counts = np.zeros((B,), np.int32)
+            rids = np.zeros((B,), np.int32)
+            tidx = np.zeros((B,), np.int32)
+            temps = np.zeros((B,), np.float32)
+            was_prefill = [False] * B
+            for b, s in enumerate(slot):
+                if s is None:
+                    continue
+                rids[b] = s.req.request_id
+                temps[b] = s.req.temperature
+                tidx[b] = len(s.gen)
+                if s.pos < len(s.prompt):
+                    n = min(C, len(s.prompt) - s.pos)
+                    tokens[b, :n] = s.prompt[s.pos: s.pos + n]
+                    counts[b] = n
+                    was_prefill[b] = True
+                else:
+                    tokens[b, 0] = s.last
+                    counts[b] = 1
+
+            nxt, cache = self._step(
+                self.params, cache, jnp.asarray(tokens),
+                jnp.asarray(counts), jnp.asarray(rids), jnp.asarray(tidx),
+                jnp.asarray(temps), key)
+            nxt = np.asarray(nxt)
+            stats.step_dispatches += 1
+            STATS.record("mixed_step")
+
+            # idle accounting is in model-evaluation units: the mixed step
+            # runs max(counts) sub-steps over every lane, so an empty lane
+            # rides the whole window and a live lane rides the sub-steps
+            # beyond its own count — both are dispatched-but-useless work
+            window = int(counts.max())
+            for b in range(B):
+                s = slot[b]
+                if s is None:
+                    stats.idle_slot_steps += window
+                    STATS.record("idle_slot_steps", window)
+                    continue
+                if was_prefill[b]:
+                    n = int(counts[b])
+                    s.pos += n
+                    stats.prefill_tokens += n
+                    STATS.record("prefill_tokens", n)
+                    stats.idle_slot_steps += window - n
+                    STATS.record("idle_slot_steps", window - n)
+                    if s.pos < len(s.prompt):
+                        continue        # mid-prefill: sample is discarded
+                else:
+                    stats.decode_slot_steps += 1
+                    STATS.record("decode_slot_steps")
+                    stats.idle_slot_steps += window - 1
+                    STATS.record("idle_slot_steps", window - 1)
+                tok = int(nxt[b])
+                s.gen.append(tok)
+                s.last = tok
+                stats.generated_tokens += 1
+                if len(s.gen) >= s.req.max_new_tokens:
+                    complete(s.idx, s.req, s.prompt, s.gen)
+                    slot[b] = None
+                    dirty[b] = True
+
+        stats.wall_s = time.perf_counter() - t0
+        self.last_stats = stats
+        return completions  # type: ignore[return-value]

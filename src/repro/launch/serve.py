@@ -1,12 +1,25 @@
-"""Batched serving driver: prefill + decode loop with a static KV/SSM cache.
+"""Batched serving drivers: the static two-phase loop and the
+continuous-batching engine.
 
-The serving model is the classic two-phase one: a batch of requests is
-prefilled (full-sequence forward, last-position logits), then tokens are
-generated step-by-step through ``lm.decode_step`` — the same function the
-decode dry-run cells lower for the production meshes.  Greedy or
-temperature sampling; per-request stop lengths (continuous-batching slot
-semantics: finished requests keep cycling a pad token, their cache slots
-are reusable).
+Two drivers share one model (params, jitted ``lm.decode_step`` family):
+
+* ``Server.generate`` — the classic static path: a rectangular batch is
+  prefilled, then decoded in lock-step.  Kept as the parity baseline; its
+  historical defects are fixed here: the loop stops as soon as every
+  request has passed its stop length (and dispatches nothing at all when
+  ``stops.max() == 0``), the prompt shape is validated against
+  ``ServeConfig`` and against the cache ``max_len``, and each call draws a
+  fresh RNG stream (per-call ``fold_in`` on a call counter) instead of
+  replaying ``PRNGKey(seed + 1)`` forever.
+* ``Server.engine()`` — builds a :class:`repro.launch.engine.Engine` over
+  the same params: slot-managed KV cache, queue admission, one jitted
+  mixed prefill/decode step.  Use it for ragged traffic.
+
+Dispatch accounting: the static driver records into ``STATS`` (runtime
+keys — ``prefill`` / ``decode`` dispatches plus ``decode_slot_steps``, the
+slot-units of decode work including the pad cycling of finished requests)
+and exposes a per-run :class:`~repro.core.scheduler.ServeStats` via
+``Server.last_stats`` for throughput comparisons against the engine.
 
 Usage:
   python -m repro.launch.serve --arch qwen2.5-14b --reduced --new-tokens 16
@@ -25,7 +38,13 @@ import numpy as np
 
 from repro.configs import LM_SHAPES, get_config
 from repro.configs.base import ModelConfig, RuntimeConfig
+from repro.core.scheduler import ServeStats
+from repro.kernels.fused_stack.ops import DispatchStats
+from repro.launch import engine as engine_mod
 from repro.models import lm
+
+STATS = DispatchStats(keys=("prefill", "decode", "decode_slot_steps",
+                            "generated_tokens"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +75,8 @@ class Server:
         self.sc = sc
         self.rt = RuntimeConfig(mode=sc.mode, interpret=True)
         self.params, _ = lm.init(jax.random.PRNGKey(sc.seed), cfg)
+        self.last_stats: ServeStats | None = None
+        self._n_calls = 0
 
         cfg_, rt_ = self.cfg, self.rt
 
@@ -82,10 +103,26 @@ class Server:
         self._decode = decode_fn
         self._prefill = prefill_fn
 
+    def engine(self, *, slots: int | None = None, prefill_chunk: int = 8,
+               seed: int | None = None) -> engine_mod.Engine:
+        """A continuous-batching :class:`~repro.launch.engine.Engine` over
+        this server's params/config (``slots`` defaults to the static
+        batch width; the cache budget is the same ``max_len``)."""
+        return engine_mod.Engine(
+            self.cfg, self.params, self.rt,
+            slots=self.sc.batch if slots is None else slots,
+            max_len=self.sc.max_len, prefill_chunk=prefill_chunk,
+            seed=self.sc.seed if seed is None else seed)
+
     def prefill(self, tokens: jnp.ndarray) -> tuple[Any, jnp.ndarray]:
         """Ingest the prompt (cache-building prefill) in a single jitted
         dispatch.  Returns (cache, last-token logits)."""
         b, s = tokens.shape
+        if s > self.sc.max_len:
+            raise ValueError(
+                f"prompt length {s} exceeds cache max_len = "
+                f"{self.sc.max_len}; the prefill would write past the end "
+                f"of the KV cache")
         cache = lm.init_decode_cache(self.cfg, b, self.sc.max_len,
                                      dtype=jnp.float32)
         if s == 0:
@@ -93,6 +130,7 @@ class Server:
             # starts from all-zero logits (greedy decodes the pad token 0)
             # instead of crashing on ``logits[:, 0]`` with logits = None.
             return cache, jnp.zeros((b, self.cfg.vocab_size), jnp.float32)
+        STATS.record("prefill")
         logits, cache = self._prefill(self.params, cache,
                                       jnp.asarray(tokens))
         return cache, logits[:, 0]
@@ -104,25 +142,84 @@ class Server:
             key, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
 
     def generate(self, prompts: np.ndarray,
-                 stop_lengths: np.ndarray | None = None) -> np.ndarray:
-        """prompts: (B, P) int32.  Returns (B, new_tokens) generations."""
+                 stop_lengths: np.ndarray | None = None,
+                 key: jnp.ndarray | None = None) -> np.ndarray:
+        """prompts: (B, P) int32.  Returns (B, new_tokens) generations;
+        rows are zero-padded past their stop length.
+
+        ``key`` overrides the sampling key for this call; by default each
+        call folds a call counter into ``PRNGKey(seed + 1)``, so repeated
+        temperature-sampled calls draw distinct streams (pass an explicit
+        key to reproduce a call).
+        """
         sc = self.sc
-        tokens = jnp.asarray(prompts, jnp.int32)
-        cache, logits = self.prefill(tokens)
-        key = jax.random.PRNGKey(sc.seed + 1)
-        outs = []
-        stops = (np.full((tokens.shape[0],), sc.new_tokens)
-                 if stop_lengths is None else stop_lengths)
-        for i in range(sc.new_tokens):
+        prompts = np.asarray(prompts)
+        if prompts.ndim != 2 or prompts.shape != (sc.batch, sc.prompt_len):
+            raise ValueError(
+                f"prompts shape {tuple(prompts.shape)} does not match "
+                f"ServeConfig(batch={sc.batch}, prompt_len={sc.prompt_len})")
+        if sc.prompt_len + sc.new_tokens > sc.max_len:
+            raise ValueError(
+                f"prompt_len + new_tokens = {sc.prompt_len} + "
+                f"{sc.new_tokens} exceeds cache max_len = {sc.max_len}; "
+                f"the generation would write past the end of the KV cache")
+        b = sc.batch
+        stops = (np.full((b,), sc.new_tokens)
+                 if stop_lengths is None else np.asarray(stop_lengths))
+        if stops.shape != (b,):
+            raise ValueError(
+                f"stop_lengths shape {tuple(stops.shape)} does not match "
+                f"the batch: expected ({b},)")
+        stops = np.clip(stops, 0, sc.new_tokens)
+        out = np.zeros((b, sc.new_tokens), np.int32)
+        stats = ServeStats(n_requests=b, n_slots=b)
+        t0 = time.perf_counter()
+
+        # Every request at stop length 0 => nothing to generate: return the
+        # all-pad result without a single dispatch (not even the prefill).
+        live_steps = int(stops.max()) if b else 0
+        if live_steps == 0:
+            self.last_stats = stats
+            return out
+
+        cache, logits = self.prefill(jnp.asarray(prompts, jnp.int32))
+        if sc.prompt_len > 0:           # empty prompts dispatch nothing
+            stats.step_dispatches += 1
+            stats.prefill_tokens += b * sc.prompt_len
+        if key is None:
+            key = jax.random.fold_in(jax.random.PRNGKey(sc.seed + 1),
+                                     self._n_calls)
+        self._n_calls += 1
+        for i in range(live_steps):
             key, sub = jax.random.split(key)
             nxt = self._sample(logits, sub)
             done = i >= stops
             nxt = jnp.where(jnp.asarray(done), 0, nxt)      # pad finished
-            outs.append(np.asarray(nxt))
-            logits_full, cache = self._decode(self.params, cache,
-                                              nxt[:, None])
-            logits = logits_full[:, 0]
-        return np.stack(outs, axis=1)
+            out[:, i] = np.asarray(nxt)
+            n_live = int((~done).sum())
+            stats.generated_tokens += n_live
+            STATS.record("generated_tokens", n_live)
+            # The loop used to march all new_tokens steps, cycling pad
+            # tokens through full decode dispatches long after done.all().
+            # The last sampled step needs no further logits either: the
+            # final decode is skipped too.
+            if i + 1 < live_steps:
+                STATS.record("decode")
+                STATS.record("decode_slot_steps", b)
+                stats.step_dispatches += 1
+                stats.decode_slot_steps += b
+                # slots whose request is already past its stop length only
+                # cycle a pad token through this dispatch — the waste the
+                # continuous-batching engine exists to remove
+                stats.padded_decode_slot_steps += b - int((i + 1 < stops).sum())
+                logits_full, cache = self._decode(self.params, cache,
+                                                  nxt[:, None])
+                logits = logits_full[:, 0]
+        stats.completed = b
+        stats.admitted = b
+        stats.wall_s = time.perf_counter() - t0
+        self.last_stats = stats
+        return out
 
 
 def main(argv=None) -> int:

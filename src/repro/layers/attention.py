@@ -215,8 +215,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode(params, x_t: jnp.ndarray, cache: KVCache, cfg: ModelConfig,
-           rt: RuntimeConfig) -> tuple[jnp.ndarray, KVCache]:
-    """One decode step.  x_t: (B, 1, D)."""
+           rt: RuntimeConfig, *, active: jnp.ndarray | None = None
+           ) -> tuple[jnp.ndarray, KVCache]:
+    """One decode step.  x_t: (B, 1, D).
+
+    ``active`` is an optional (B,) bool slot mask (continuous-batching
+    engine): inactive slots neither write their K/V into the cache nor
+    advance their length — their cache state is frozen while other slots
+    in the same dispatch prefill or decode.  ``None`` means all active.
+    """
     b = x_t.shape[0]
     h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q, k_new, v_new = _project(params, x_t, cfg)          # (B,*,1,hd)
@@ -231,11 +238,13 @@ def decode(params, x_t: jnp.ndarray, cache: KVCache, cfg: ModelConfig,
     idx = cache.length[:, None, None, None]
     barange = jnp.arange(cache.k.shape[2])[None, None, :, None]
     write = barange == idx
+    if active is not None:
+        write = write & active[:, None, None, None]
     k = jnp.where(write, k_new.astype(cache.k.dtype), cache.k)
     v = jnp.where(write, v_new.astype(cache.v.dtype), cache.v)
-    new_cache = KVCache(k=k, v=v, length=cache.length + 1)
-
-    lengths = cache.length + 1
+    adv = 1 if active is None else active.astype(jnp.int32)
+    lengths = cache.length + adv
+    new_cache = KVCache(k=k, v=v, length=lengths)
     if rt.mode == "brainslug":
         o = attn_ops.flash_decode(q, k.astype(q.dtype), v.astype(q.dtype),
                                   lengths, block_k=rt.decode_block_k,

@@ -129,8 +129,13 @@ def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
 
 
 def decode(params, x_t: jnp.ndarray, cache: MambaCache, cfg: ModelConfig,
-           rt: RuntimeConfig) -> tuple[jnp.ndarray, MambaCache]:
-    """One recurrent step.  x_t: (B, 1, D)."""
+           rt: RuntimeConfig, *, active: jnp.ndarray | None = None
+           ) -> tuple[jnp.ndarray, MambaCache]:
+    """One recurrent step.  x_t: (B, 1, D).
+
+    ``active`` (B,) bool freezes inactive slots' recurrent state (conv
+    window + SSM state) — the mamba analogue of not advancing a KV cache.
+    """
     b = x_t.shape[0]
     h, p, n, di = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
                    cfg.d_inner)
@@ -160,8 +165,11 @@ def decode(params, x_t: jnp.ndarray, cache: MambaCache, cfg: ModelConfig,
         _gated_norm_program(1e-6), {"y": y[:, None], "z": z[:, None]},
         {"scale": params["norm_scale"]}, mode=rt.mode,
         interpret=rt.interpret)["o"]
-    new_cache = MambaCache(conv=window[:, 1:].astype(cache.conv.dtype),
-                           state=state)
+    new_conv = window[:, 1:].astype(cache.conv.dtype)
+    if active is not None:
+        new_conv = jnp.where(active[:, None, None], new_conv, cache.conv)
+        state = jnp.where(active[:, None, None, None], state, cache.state)
+    new_cache = MambaCache(conv=new_conv, state=state)
     return (out[:, 0] @ params["wo"])[:, None], new_cache
 
 

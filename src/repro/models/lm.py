@@ -364,19 +364,36 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
-def _decode_sub(kind: str, p, cache, carry, cfg, rt, shared_params=None):
+def reset_slots(cache: dict, mask: jnp.ndarray) -> dict:
+    """Zero the decode state of the batch slots where ``mask`` is True.
+
+    Slot admission primitive for the continuous-batching engine: a freed
+    slot's KV contents, per-slot length, mamba conv window and SSM state
+    are cleared so a new request can prefill from position 0.  Every cache
+    leaf is layer-stacked, so batch is axis 1: (L, B, ...)."""
+    def leaf(x):
+        m = mask.reshape((1, -1) + (1,) * (x.ndim - 2))
+        return jnp.where(m, jnp.zeros((), x.dtype), x)
+
+    return jax.tree_util.tree_map(leaf, cache)
+
+
+def _decode_sub(kind: str, p, cache, carry, cfg, rt, shared_params=None,
+                active=None):
     resid, pending = carry
     norm_kw = dict(norm=cfg.norm, mode=rt.mode, interpret=rt.interpret)
     if kind == "mamba":
         h1, resid = stacks.add_norm(pending, resid, p["norm1"]["scale"],
                                     p["norm1"].get("bias"), **norm_kw)
-        out, cache = mamba2.decode(p["mixer"], h1, cache, cfg, rt)
+        out, cache = mamba2.decode(p["mixer"], h1, cache, cfg, rt,
+                                   active=active)
         return (resid, out), cache
     if kind == "shared_attn":
         p = shared_params
     h1, resid = stacks.add_norm(pending, resid, p["norm1"]["scale"],
                                 p["norm1"].get("bias"), **norm_kw)
-    attn_out, cache = attention.decode(p["attn"], h1, cache, cfg, rt)
+    attn_out, cache = attention.decode(p["attn"], h1, cache, cfg, rt,
+                                       active=active)
     h2, resid = stacks.add_norm(attn_out, resid, p["norm2"]["scale"],
                                 p["norm2"].get("bias"), **norm_kw)
     if "moe" in p:
@@ -389,9 +406,17 @@ def _decode_sub(kind: str, p, cache, carry, cfg, rt, shared_params=None):
 
 
 def decode_step(params, cache: dict, tokens_t: jnp.ndarray,
-                cfg: ModelConfig, rt: RuntimeConfig
+                cfg: ModelConfig, rt: RuntimeConfig,
+                active: jnp.ndarray | None = None
                 ) -> tuple[jnp.ndarray, dict]:
-    """One serving step: tokens_t (B, 1) -> (logits (B, 1, V), new cache)."""
+    """One serving step: tokens_t (B, 1) -> (logits (B, 1, V), new cache).
+
+    ``active`` is an optional (B,) bool slot mask for mixed continuous-
+    batching dispatches: inactive slots compute (the batch shape is static)
+    but their per-slot cache state — KV write/length, mamba conv window and
+    SSM state — is frozen, so one compiled step serves any mix of
+    prefilling, decoding and idle slots.
+    """
     plan = layer_plan(cfg)
     x = params["embed"][tokens_t]
     if cfg.tie_embeddings:
@@ -405,7 +430,8 @@ def decode_step(params, cache: dict, tokens_t: jnp.ndarray,
         for j, kind in enumerate(plan.superblock):
             p = blk_params.get(f"sub{j}")
             carry, out_cache[f"sub{j}"] = _decode_sub(
-                kind, p, blk_cache[f"sub{j}"], carry, cfg, rt, shared)
+                kind, p, blk_cache[f"sub{j}"], carry, cfg, rt, shared,
+                active)
         return carry, out_cache
 
     carry = (x, jnp.zeros_like(x))
@@ -415,7 +441,8 @@ def decode_step(params, cache: dict, tokens_t: jnp.ndarray,
     if "tail" in params:
         def tail_body(c, scanned):
             p, cc = scanned
-            c, out = _decode_sub("mamba", p["sub0"], cc["sub0"], c, cfg, rt)
+            c, out = _decode_sub("mamba", p["sub0"], cc["sub0"], c, cfg, rt,
+                                 active=active)
             return c, {"sub0": out}
         carry, new_cache["tail"] = jax.lax.scan(
             tail_body, carry, (params["tail"], cache["tail"]))

@@ -157,6 +157,56 @@ class TestFlashAttention:
         o2 = attn_ops.flash_decode(q, k2, v2, lengths, interpret=True)
         _close(o1, o2, jnp.float32)
 
+    @pytest.mark.parametrize("block_k", [32, 128])
+    def test_decode_zero_length_emits_zeros(self, rng, block_k):
+        """A fully-masked slot (length 0 — a freed continuous-batching
+        slot) attends over zero keys: the all-masked online softmax must
+        produce exactly zero output, not NaN and not a stale-cache
+        average.  Ref and kernel implement the same convention."""
+        b, h, g, s, d = 2, 4, 2, 128, 16
+        q = _randn(rng, (b, h, 1, d), jnp.float32)
+        k = _randn(rng, (b, g, s, d), jnp.float32)
+        v = _randn(rng, (b, g, s, d), jnp.float32)
+        lengths = jnp.asarray([0, s // 2], jnp.int32)
+        o = attn_ops.flash_decode(q, k, v, lengths, block_k=block_k,
+                                  interpret=True)
+        assert bool(jnp.isfinite(o).all())
+        np.testing.assert_array_equal(np.asarray(o[0]),
+                                      np.zeros_like(np.asarray(o[0])))
+        oref = attn_ref.decode_ref(q, k, v, lengths)
+        np.testing.assert_array_equal(np.asarray(oref[0]),
+                                      np.zeros_like(np.asarray(oref[0])))
+        _close(o, oref, jnp.float32)
+
+    def test_decode_full_length_no_tail_mask(self, rng):
+        """lengths == S: every cache position is valid — the kernel must
+        match an unmasked softmax over the whole cache exactly."""
+        b, h, g, s, d = 2, 4, 2, 96, 16
+        q = _randn(rng, (b, h, 1, d), jnp.float32)
+        k = _randn(rng, (b, g, s, d), jnp.float32)
+        v = _randn(rng, (b, g, s, d), jnp.float32)
+        lengths = jnp.full((b,), s, jnp.int32)
+        o = attn_ops.flash_decode(q, k, v, lengths, block_k=32,
+                                  interpret=True)
+        oref = attn_ref.attention_ref(q, k, v, causal=False)  # no length op
+        _close(o, oref, jnp.float32)
+
+    def test_decode_ragged_lengths_parity(self, rng):
+        """Per-slot ragged lengths in one dispatch (the continuous-batching
+        batch shape): every edge in one batch — empty slot, single token,
+        mid-cache, full cache."""
+        h, g, s, d = 4, 2, 64, 16
+        lengths = jnp.asarray([0, 1, 37, s], jnp.int32)
+        b = lengths.shape[0]
+        q = _randn(rng, (b, h, 1, d), jnp.float32)
+        k = _randn(rng, (b, g, s, d), jnp.float32)
+        v = _randn(rng, (b, g, s, d), jnp.float32)
+        o = attn_ops.flash_decode(q, k, v, lengths, block_k=32,
+                                  interpret=True)
+        oref = attn_ref.decode_ref(q, k, v, lengths)
+        assert bool(jnp.isfinite(o).all())
+        _close(o, oref, jnp.float32)
+
 
 # ---------------------------------------------------------------------------
 # SSD (mamba2): pallas kernel vs chunked-jnp vs sequential oracle

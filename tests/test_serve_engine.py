@@ -1,0 +1,260 @@
+"""Serving-path tests: the fixed static decode loop and the
+continuous-batching engine (slot admission, mixed jitted step, per-request
+sampling state, dispatch accounting)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import engine as engine_mod
+from repro.launch import serve as serve_mod
+from repro.launch.engine import Request
+from repro.launch.serve import ServeConfig, Server
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def dense_server():
+    return Server(ServeConfig(arch="deepseek-7b", batch=4, prompt_len=6,
+                              new_tokens=6, max_len=16))
+
+
+@pytest.fixture(scope="module")
+def dense_prompts(dense_server):
+    rng = np.random.default_rng(0)
+    return rng.integers(0, dense_server.cfg.vocab_size,
+                        (4, 6)).astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def mamba_server():
+    return Server(ServeConfig(arch="mamba2-2.7b", batch=2, prompt_len=4,
+                              new_tokens=4, max_len=16))
+
+
+# ---------------------------------------------------------------------------
+# static-loop bugfixes
+# ---------------------------------------------------------------------------
+
+class TestStaticLoopFixes:
+    def test_stop_loop_ends_at_done_all(self, dense_server, dense_prompts):
+        """The decode loop used to run all new_tokens steps even after
+        every request had passed its stop length.  Fixed: dispatches stop
+        at max(stops) (and the last sampled step needs no decode)."""
+        stops = np.asarray([2, 5, 1, 5])
+        before = serve_mod.STATS.snapshot()
+        gen = dense_server.generate(dense_prompts, stop_lengths=stops)
+        delta = serve_mod.STATS.delta(before)
+        assert delta["prefill"] == 1
+        assert delta["decode"] == int(stops.max()) - 1       # 4, not 6
+        assert delta["decode_slot_steps"] == 4 * (int(stops.max()) - 1)
+        assert delta["generated_tokens"] == int(stops.sum())
+        assert gen.shape == (4, 6)
+        assert (gen[:, 5] == 0).all()            # past max(stops): all pad
+        assert (gen[0, 2:] == 0).all()
+
+    def test_all_stopped_dispatches_nothing(self, dense_server,
+                                            dense_prompts):
+        """stops.max() == 0: there is nothing to generate, so neither the
+        prefill nor any decode step may be dispatched."""
+        before = serve_mod.STATS.snapshot()
+        gen = dense_server.generate(dense_prompts,
+                                    stop_lengths=np.zeros(4, np.int64))
+        delta = serve_mod.STATS.delta(before)
+        assert delta["prefill"] == 0
+        assert delta["decode"] == 0
+        assert (gen == 0).all()
+
+    def test_generate_validates_prompt_shape(self, dense_server):
+        """ServeConfig.batch / prompt_len used to be silently ignored."""
+        with pytest.raises(ValueError, match="does not match"):
+            dense_server.generate(np.zeros((2, 6), np.int32))
+        with pytest.raises(ValueError, match="does not match"):
+            dense_server.generate(np.zeros((4, 5), np.int32))
+
+    def test_generate_validates_max_len(self):
+        """prompt_len + new_tokens > max_len used to silently write past
+        the end of the KV cache (the where-select write simply never
+        matched, corrupting positions via the rope offset)."""
+        sc = ServeConfig(arch="deepseek-7b", batch=1, prompt_len=8,
+                         new_tokens=12, max_len=16)
+        server = Server(sc)
+        with pytest.raises(ValueError, match="max_len"):
+            server.generate(np.zeros((1, 8), np.int32))
+
+    def test_prefill_validates_prompt_len(self, dense_server):
+        with pytest.raises(ValueError, match="max_len"):
+            dense_server.prefill(jnp.zeros((1, 17), jnp.int32))
+
+    def test_temperature_rng_fresh_per_call(self):
+        """Repeated generate() used to replay PRNGKey(seed+1) forever, so
+        temperature sampling returned byte-identical generations on every
+        call.  Now each call folds in a call counter; an explicit key
+        reproduces a call exactly."""
+        sc = ServeConfig(arch="deepseek-7b", batch=2, prompt_len=3,
+                         new_tokens=5, max_len=16, temperature=0.8)
+        server = Server(sc)
+        rng = np.random.default_rng(3)
+        prompts = rng.integers(0, server.cfg.vocab_size,
+                               (2, 3)).astype(np.int32)
+        g1 = server.generate(prompts)
+        g2 = server.generate(prompts)
+        assert (g1 != g2).any()
+        key = jax.random.PRNGKey(123)
+        g3 = server.generate(prompts, key=key)
+        g4 = server.generate(prompts, key=key)
+        np.testing.assert_array_equal(g3, g4)
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching engine
+# ---------------------------------------------------------------------------
+
+class TestEngine:
+    def test_parity_and_dispatch_win(self, dense_server, dense_prompts):
+        """Acceptance: a queue that fits in one static batch matches the
+        fixed static loop token-for-token under greedy sampling, and with
+        ragged stop lengths the engine does strictly less decode dispatch
+        work (finished slots go idle / are refilled instead of cycling pad
+        tokens through full dispatches)."""
+        stops = np.asarray([2, 6, 1, 6])
+        gen = dense_server.generate(dense_prompts, stop_lengths=stops)
+        static_stats = dense_server.last_stats
+
+        engine = dense_server.engine(slots=4, prefill_chunk=6)
+        reqs = [Request(request_id=i, prompt=dense_prompts[i],
+                        max_new_tokens=int(stops[i]))
+                for i in range(4)]
+        before = engine_mod.STATS.snapshot()
+        comps = engine.run(reqs)
+        delta = engine_mod.STATS.delta(before)
+
+        for i, c in enumerate(comps):
+            assert c.request_id == i
+            assert c.tokens.tolist() == gen[i, : stops[i]].tolist()
+        assert engine.last_stats.decode_slot_steps \
+            < static_stats.decode_slot_steps
+        assert delta["decode_slot_steps"] == int((stops - 1).sum())
+        assert engine.last_stats.generated_tokens == int(stops.sum())
+
+    def test_refill_is_slot_count_invariant(self, dense_server):
+        """Continuous batching must not change what any request generates:
+        5 ragged requests through 2 slots (with admission refilling freed
+        slots mid-run) produce exactly what 5 fresh slots produce."""
+        rng = np.random.default_rng(7)
+        plens = [5, 3, 1, 4, 2]
+        prompts = [rng.integers(0, dense_server.cfg.vocab_size,
+                                (p,)).astype(np.int32) for p in plens]
+        stops = [3, 6, 2, 4, 5]
+        reqs = [Request(request_id=i, prompt=prompts[i],
+                        max_new_tokens=stops[i]) for i in range(5)]
+
+        eng2 = dense_server.engine(slots=2, prefill_chunk=4)
+        before = engine_mod.STATS.snapshot()
+        comps2 = eng2.run(reqs)
+        delta = engine_mod.STATS.delta(before)
+        comps5 = dense_server.engine(slots=5, prefill_chunk=4).run(reqs)
+
+        for a, b in zip(comps2, comps5):
+            assert a.tokens.tolist() == b.tokens.tolist()
+        assert delta["slot_reset"] > 0          # freed slots were recycled
+        assert eng2.last_stats.admitted == 5
+        assert eng2.last_stats.completed == 5
+        assert eng2.last_stats.prefill_tokens == sum(plens)
+        assert eng2.last_stats.generated_tokens == sum(stops)
+
+    def test_rng_lane_is_order_invariant(self, dense_server):
+        """Per-request RNG lanes: a sampled request generates the same
+        tokens no matter what traffic it shares the batch with or which
+        slot it lands in (lane = fold_in(run_key, request_id))."""
+        rng = np.random.default_rng(5)
+        pa = rng.integers(0, dense_server.cfg.vocab_size,
+                          (3,)).astype(np.int32)
+        pb = rng.integers(0, dense_server.cfg.vocab_size,
+                          (5,)).astype(np.int32)
+        ra = Request(request_id=10, prompt=pa, max_new_tokens=4,
+                     temperature=0.7)
+        rb = Request(request_id=11, prompt=pb, max_new_tokens=4,
+                     temperature=0.7)
+        o1 = dense_server.engine(slots=2).run([ra, rb])
+        o2 = dense_server.engine(slots=2).run([rb, ra])
+        assert o1[0].tokens.tolist() == o2[1].tokens.tolist()
+        assert o1[1].tokens.tolist() == o2[0].tokens.tolist()
+
+    def test_admission_validates_max_len(self, dense_server):
+        engine = dense_server.engine(slots=2)
+        with pytest.raises(ValueError, match="max_len"):
+            engine.run([Request(request_id=0,
+                                prompt=np.zeros(10, np.int32),
+                                max_new_tokens=10)])       # 20 > 16
+
+    def test_zero_new_tokens_dispatches_nothing(self, dense_server):
+        engine = dense_server.engine(slots=2)
+        before = engine_mod.STATS.snapshot()
+        comps = engine.run([Request(request_id=0,
+                                    prompt=np.zeros(4, np.int32),
+                                    max_new_tokens=0)])
+        delta = engine_mod.STATS.delta(before)
+        assert comps[0].tokens.shape == (0,)
+        assert delta["mixed_step"] == 0
+        assert engine.last_stats.completed == 1
+
+    def test_empty_prompt_matches_static_convention(self, dense_server):
+        """No prompt => no last-token logits: greedy decodes the pad token
+        first (the static driver's zero-length-prompt semantics)."""
+        engine = dense_server.engine(slots=1)
+        comps = engine.run([Request(request_id=0,
+                                    prompt=np.zeros(0, np.int32),
+                                    max_new_tokens=3)])
+        assert comps[0].tokens.shape == (3,)
+        assert comps[0].tokens[0] == 0
+
+    def test_mamba_engine_refill(self, mamba_server):
+        """Slot recycling also resets recurrent (conv window + SSM) state:
+        mamba requests are slot-count invariant too."""
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(0, mamba_server.cfg.vocab_size,
+                                (p,)).astype(np.int32) for p in (4, 2, 3)]
+        reqs = [Request(request_id=i, prompt=prompts[i], max_new_tokens=3)
+                for i in range(3)]
+        a = mamba_server.engine(slots=2, prefill_chunk=3).run(reqs)
+        b = mamba_server.engine(slots=3, prefill_chunk=3).run(reqs)
+        for x, y in zip(a, b):
+            assert x.tokens.tolist() == y.tokens.tolist()
+
+    def test_active_mask_freezes_cache(self, dense_server):
+        """decode_step(active=...): inactive slots must not advance their
+        KV length nor write K/V — the invariant the mixed prefill/decode
+        step relies on."""
+        cfg, rt, params = (dense_server.cfg, dense_server.rt,
+                           dense_server.params)
+        cache = lm.init_decode_cache(cfg, 2, 8, dtype=jnp.float32)
+        tok = jnp.asarray([[3], [5]], jnp.int32)
+        _, c1 = lm.decode_step(params, cache, tok, cfg, rt,
+                               jnp.asarray([True, False]))
+        lens = np.asarray(c1["blocks"]["sub0"].length)
+        assert (lens[:, 0] == 1).all()
+        assert (lens[:, 1] == 0).all()
+        assert (np.asarray(c1["blocks"]["sub0"].k)[:, 1] == 0).all()
+        _, c0 = lm.decode_step(params, cache, tok, cfg, rt,
+                               jnp.asarray([False, False]))
+        for a, b in zip(jax.tree_util.tree_leaves(cache),
+                        jax.tree_util.tree_leaves(c0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_reset_slots_clears_only_masked(self, dense_server):
+        cfg, rt, params = (dense_server.cfg, dense_server.rt,
+                           dense_server.params)
+        cache = lm.init_decode_cache(cfg, 2, 8, dtype=jnp.float32)
+        tok = jnp.asarray([[3], [5]], jnp.int32)
+        _, cache = lm.decode_step(params, cache, tok, cfg, rt)
+        reset = lm.reset_slots(cache, jnp.asarray([True, False]))
+        lens = np.asarray(reset["blocks"]["sub0"].length)
+        assert (lens[:, 0] == 0).all()
+        assert (lens[:, 1] == 1).all()
+        assert (np.asarray(reset["blocks"]["sub0"].k)[:, 0] == 0).all()
+        np.testing.assert_array_equal(
+            np.asarray(reset["blocks"]["sub0"].k)[:, 1],
+            np.asarray(cache["blocks"]["sub0"].k)[:, 1])
