@@ -1,8 +1,9 @@
 """Quickstart — the paper's Listing 3 experience, in JAX.
 
-Build a VGG-style network, call ``optimize`` on it (one line), and run it.
-The optimized network computes the same function; the depth-first schedule
-changes only memory traffic.  Run:
+Write a plain-jnp VGG forward, call ``repro.api.optimize`` on it (one
+function call — no IR construction), and run it.  The optimized callable
+computes the same function; the depth-first schedule changes only memory
+traffic.  Run:
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,37 +11,32 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, resource
+from repro import api
 from repro.models import cnn
 
-# 1. load the model (paper: torchvision.models...)
-graph, params = cnn.vgg_net(stages=(32, 64, 128), batch_norm=True)
+# 1. the model: an ordinary JAX function + its parameters
+#    (paper: model = torchvision.models.vgg16(...))
+_, params = cnn.vgg_net(stages=(32, 64, 128), batch_norm=True)
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 32, 32, 3), jnp.float32)
 
-# 2. optimize with BrainSlug (paper: brainslug.optimize(model))
-net = api.optimize_graph(graph, x.shape,
-                         api.OptimizeConfig(mode="brainslug"))
-baseline = api.optimize_graph(graph, x.shape,
-                              api.OptimizeConfig(mode="barrier"))
+# 2. optimize with BrainSlug (paper: brainslug.optimize(model)) — the
+#    tracer lifts the jaxpr into the IR, finds the optimizable stacks, and
+#    collapses them against the device budget.
+net = api.optimize(cnn.vgg_fn, x, params,
+                   config=api.OptimizeConfig(mode="brainslug"))
 
-# 3. execute the model
+# 3. execute: drop-in for the original function
 y = net(x, params)
-y_ref = baseline(x, params)
+y_ref = cnn.vgg_fn(x, params)
 np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                            rtol=2e-4, atol=2e-4)
 
 print(f"output shape            : {y.shape}")
-print(f"max |optimized - ref|   : "
+print(f"max |optimized - raw fn|: "
       f"{float(jnp.max(jnp.abs(y - y_ref))):.3e}")
 print(f"stacks found            : {net.n_stacks}")
 print(f"fused sequences emitted : {net.n_sequences}")
 
-# 4. what the schedule change buys (analytic HBM traffic, TPU v5e budget)
-for idx, plan in net.plans.items():
-    seg = net.segments[idx]
-    in_shapes = {v: net.shapes[v] for v in seg.stack.inputs}
-    bf = resource.breadth_first_traffic(seg.stack, in_shapes, 4)
-    df = resource.depth_first_traffic(plan, in_shapes, 4)
-    print(f"stack {seg.stack.name:24s} ops={len(seg.stack.ops)} "
-          f"breadth-first {bf/2**20:7.2f} MiB -> depth-first "
-          f"{df/2**20:7.2f} MiB  ({bf/df:.2f}x less HBM traffic)")
+# 4. what the tracer captured and what the schedule change buys
+#    (ops captured vs. left opaque, analytic HBM traffic per stack)
+print(net.explain())

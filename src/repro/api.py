@@ -1,0 +1,183 @@
+"""Public BrainSlug API — ``repro.api``.
+
+The paper's promise is *transparency*: ``brainslug.optimize(model)`` on an
+unmodified network (Listing 3).  This facade delivers the JAX version of
+that promise:
+
+    from repro import api
+
+    net = api.optimize(fn, *example_args,
+                       config=api.OptimizeConfig(mode="brainslug"))
+    y = net(*args)          # same signature / pytree structure as fn
+    print(net.explain())    # ops captured vs. left opaque, HBM traffic
+
+``optimize`` traces the plain JAX callable into the BrainSlug IR
+(:mod:`repro.core.trace`), partitions it into opaque segments and
+optimizable stacks, collapses each stack against the device budget, and
+returns a drop-in callable.  The result is jit-compatible, and — with
+``config.differentiable=True`` — grad-compatible through the generated
+depth-first backward kernels (:mod:`repro.core.autodiff`).
+
+The IR-level entry points remain available for code that already builds
+graphs by hand, but new code should not: :func:`optimize_graph` and
+:func:`optimize_stack` are deprecated re-exports of
+:mod:`repro.core.api` and will warn for one release before being dropped
+from this namespace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analyzer, codegen, collapse, ir
+from repro.core import api as core_api
+from repro.core import trace as trace_mod
+
+# Canonical re-exports: the config and report types live with the core
+# implementation; this module is the supported way to reach them.
+OptimizeConfig = core_api.OptimizeConfig
+CoverageReport = core_api.CoverageReport
+StackCoverage = core_api.StackCoverage
+OptimizedNet = core_api.OptimizedNet
+MODES = core_api.MODES
+LAYOUTS = core_api.LAYOUTS
+TraceResult = trace_mod.TraceResult
+
+__all__ = [
+    "optimize", "OptimizedFn", "OptimizeConfig", "CoverageReport",
+    "StackCoverage", "TraceResult", "MODES", "LAYOUTS",
+    "optimize_graph", "optimize_stack",
+]
+
+
+@dataclasses.dataclass(eq=False)        # identity hash: jax.jit(net) works
+class OptimizedFn:
+    """A traced-and-rewritten callable (the paper's optimized model).
+
+    Drop-in for the original function: same positional signature, same
+    output pytree.  Collapsed stacks run under ``config.mode``; everything
+    else executes breadth-first exactly as traced.
+    """
+
+    trace_result: trace_mod.TraceResult
+    segments: list
+    executors: dict[int, codegen.Executor]
+    plans: dict[int, collapse.CollapsePlan]
+    config: OptimizeConfig
+    shapes: dict[str, tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)          # value name -> shape
+    param_shapes: dict[str, tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)          # param name -> shape
+
+    def __call__(self, *args):
+        tr = self.trace_result
+        leaves, tree = jax.tree_util.tree_flatten(args)
+        if tree != tr.in_tree:
+            raise TypeError(
+                f"optimized {tr.graph.name!r} was traced with argument "
+                f"structure {tr.in_tree}, called with {tree}")
+        for i, (leaf, (shape, dtype)) in enumerate(
+                zip(leaves, tr.leaf_avals)):
+            got = (tuple(jnp.shape(leaf)),
+                   jnp.asarray(leaf).dtype if not hasattr(leaf, "dtype")
+                   else leaf.dtype)
+            if got[0] != shape or got[1] != dtype:
+                # every executor/bind closure is specialized to the traced
+                # avals — fail loudly instead of deep inside a kernel
+                raise TypeError(
+                    f"optimized {tr.graph.name!r}: argument leaf {i} was "
+                    f"traced as {dtype}{list(shape)}, called with "
+                    f"{got[1]}{list(got[0])}; re-run optimize() for new "
+                    f"shapes/dtypes")
+        params = dict(tr.const_params)
+        for i, leaf in enumerate(leaves):
+            params[f"arg{i}"] = leaf
+        env = core_api.run_segments(self.segments, self.executors,
+                                    {tr.input_name: leaves[0]}, params)
+        outs = []
+        for kind, ref in tr.out_refs:
+            if kind == "env":
+                outs.append(env[ref])
+            elif kind == "leaf":
+                outs.append(leaves[ref])
+            else:                                  # captured constant
+                outs.append(ref)
+        return jax.tree_util.tree_unflatten(tr.out_tree, outs)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def graph(self) -> ir.NetGraph:
+        return self.trace_result.graph
+
+    @property
+    def n_stacks(self) -> int:
+        return len(self.executors)
+
+    @property
+    def n_sequences(self) -> int:
+        return sum(len(p.sequences) for p in self.plans.values())
+
+    def report(self) -> CoverageReport:
+        """Per-stack coverage: ops captured vs. left opaque, planned HBM
+        traffic (from the :mod:`repro.core.resource` model)."""
+        return core_api.coverage_report(self.segments, self.plans,
+                                        self.shapes, self.config.itemsize)
+
+    def explain(self) -> str:
+        """Human-readable :meth:`report`."""
+        return str(self.report())
+
+
+def optimize(fn: Callable, *example_args: Any,
+             config: OptimizeConfig = OptimizeConfig()) -> OptimizedFn:
+    """Trace a plain JAX callable and rewrite it BrainSlug-style.
+
+    ``example_args`` are example inputs (any pytree of arrays, as for
+    ``jax.jit``); the optimized callable is specialized to their
+    shapes/dtypes.  Unrecognized primitives are kept as opaque ops —
+    ``optimize`` never rejects a function, it just captures less of it
+    (see :meth:`OptimizedFn.report`).
+    """
+    tr = trace_mod.trace(fn, *example_args)
+    # every traced output must survive the rewrite, even one produced
+    # mid-stack with no in-graph consumer (stack executors only
+    # materialize their declared outputs)
+    keep = frozenset(ref for kind, ref in tr.out_refs if kind == "env")
+    segments = analyzer.analyze(tr.graph, layout="auto", keep=keep)
+    executors, plans = core_api.compile_stacks(segments, tr.shapes, config)
+    return OptimizedFn(trace_result=tr, segments=segments,
+                       executors=executors, plans=plans, config=config,
+                       shapes=dict(tr.shapes),
+                       param_shapes=dict(tr.param_shapes))
+
+
+# ---------------------------------------------------------------------------
+# Deprecated IR-level entry points (one release of warnings, then removal
+# from this namespace; repro.core.api keeps them for IR-building code).
+# ---------------------------------------------------------------------------
+
+def optimize_graph(*args, **kwargs) -> core_api.OptimizedNet:
+    """Deprecated: use :func:`optimize` on a plain JAX function instead."""
+    warnings.warn(
+        "repro.api.optimize_graph is deprecated and will be removed from "
+        "this namespace in the next release; use repro.api.optimize(fn, "
+        "*example_args) — it traces plain JAX functions, no hand-built "
+        "NetGraph needed (repro.core.api.optimize_graph remains for "
+        "IR-level code).", DeprecationWarning, stacklevel=2)
+    return core_api.optimize_graph(*args, **kwargs)
+
+
+def optimize_stack(*args, **kwargs) -> codegen.Executor:
+    """Deprecated: use :func:`optimize` on a plain JAX function instead."""
+    warnings.warn(
+        "repro.api.optimize_stack is deprecated and will be removed from "
+        "this namespace in the next release; use repro.api.optimize(fn, "
+        "*example_args) — it traces plain JAX functions, no hand-built "
+        "StackProgram needed (repro.core.api.optimize_stack remains for "
+        "IR-level code).", DeprecationWarning, stacklevel=2)
+    return core_api.optimize_stack(*args, **kwargs)

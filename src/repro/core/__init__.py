@@ -1,8 +1,9 @@
 """BrainSlug core: the paper's contribution as a composable JAX module.
 
-Pipeline (paper Fig. 8): front-end IR (:mod:`ir`) -> Network Analyzer
+Pipeline (paper Fig. 8): transparent frontend (:mod:`trace`, lifts plain
+JAX callables) or hand-built IR (:mod:`ir`) -> Network Analyzer
 (:mod:`analyzer`) -> Collapser (:mod:`collapse`, :mod:`resource`) -> Code
 Generator (:mod:`codegen`) -> Scheduler (:mod:`scheduler`).  Public entry
-point: :func:`repro.core.api.optimize`.
+point: :func:`repro.api.optimize`.
 """
 from repro.core import ir, analyzer, collapse, resource  # noqa: F401

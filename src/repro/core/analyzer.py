@@ -26,11 +26,22 @@ class Segment:
         return self.stack is not None
 
 
+#: Layouts ``analyze`` accepts.  ``auto`` classifies per run: pooling forces
+#: the spatial nhwc model, everything else is row-local.
+LAYOUTS = ("rows", "nhwc", "auto")
+
+
 def _run_to_stack(name: str, run: list[ir.OpNode], layout: str,
                   available: set[str]) -> ir.StackProgram:
     """Package a maximal optimizable run as a StackProgram.  External inputs
     are every value the run reads but does not define (this captures residual
     edges as saved-value inputs)."""
+    if layout == "auto":
+        # Shape/layout classification for traced graphs: a run with a
+        # spatial-neighborhood op needs the halo-aware nhwc resource model;
+        # a purely row-local run tiles its flattened leading dims.
+        layout = ("nhwc" if any(op.kind == ir.OpKind.POOL2D for op in run)
+                  else "rows")
     defined = {op.output for op in run}
     inputs: list[str] = []
     for op in run:
@@ -46,14 +57,23 @@ def _run_to_stack(name: str, run: list[ir.OpNode], layout: str,
                            layout=layout)
 
 
-def analyze(graph: ir.NetGraph, layout: str = "nhwc") -> list[Segment]:
+def analyze(graph: ir.NetGraph, layout: str = "nhwc",
+            keep: frozenset[str] = frozenset()) -> list[Segment]:
     """Partition ``graph`` into opaque segments and optimizable stacks.
 
     A run is broken when (a) the op is not optimizable, or (b) a value
     produced *inside* the current run is consumed by a *later* op outside it
     other than through the run tail — condition (b) keeps the graph rewrite
     semantics-preserving for residual fan-out.
+
+    ``keep`` names values that must stay visible after the rewrite even
+    though no later op consumes them — the traced frontend passes its
+    function outputs here (a stack executor only materializes its
+    declared outputs, so a kept value buried mid-run must escape).
     """
+    if layout not in LAYOUTS:
+        raise ValueError(
+            f"unknown layout {layout!r}; allowed layouts: {LAYOUTS}")
     consumers: dict[str, list[int]] = {}
     for i, op in enumerate(graph.ops):
         for v in op.inputs:
@@ -68,10 +88,12 @@ def analyze(graph: ir.NetGraph, layout: str = "nhwc") -> list[Segment]:
         nonlocal run, n_stacks
         if not run:
             return
-        # values defined in the run but consumed beyond it (not via the tail)
+        # values defined in the run but consumed beyond it (not via the
+        # tail) — or kept alive as rewritten-network outputs
         internal = {op.output for op in run[:-1]}
         escapes = [v for v in internal
-                   if any(j >= upto for j in consumers.get(v, []))]
+                   if v in keep
+                   or any(j >= upto for j in consumers.get(v, []))]
         if escapes:
             # split the run at the last escaping definition: everything up to
             # and including it is emitted op-by-op (kept breadth-first), the

@@ -21,6 +21,13 @@ import jax.numpy as jnp
 
 from repro.core import analyzer, codegen, collapse, ir, resource
 
+#: Execution modes an OptimizeConfig accepts (validated eagerly — a typo
+#: used to surface only deep inside codegen, as an opaque dispatch error).
+MODES = ("brainslug", "xla", "barrier")
+
+#: Layouts the graph entry points accept (``auto`` classifies per stack).
+LAYOUTS = analyzer.LAYOUTS
+
 
 @dataclasses.dataclass(frozen=True)
 class OptimizeConfig:
@@ -33,6 +40,126 @@ class OptimizeConfig:
     # the recomputed forward chain *and* live cotangents in VMEM, so
     # differentiable plans get smaller tiles / earlier sequence splits.
     differentiable: bool = False
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown mode {self.mode!r}; allowed modes: {MODES}")
+        if not isinstance(self.itemsize, int) or self.itemsize <= 0:
+            raise ValueError(
+                f"itemsize must be a positive int, got {self.itemsize!r}")
+
+
+#: OpKinds the paper leaves untouched by design ("Convolution and linear
+#: layers cannot be optimized") — reported separately from OPAQUE fallbacks,
+#: which are ops the frontend failed to recognize.
+BACKBONE_KINDS = frozenset({
+    ir.OpKind.MATMUL, ir.OpKind.CONV2D, ir.OpKind.ATTENTION,
+    ir.OpKind.SSD, ir.OpKind.EMBED,
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class StackCoverage:
+    """Per-stack slice of a :class:`CoverageReport`."""
+
+    name: str
+    n_ops: int
+    kinds: tuple[str, ...]
+    n_sequences: int
+    hbm_breadth_bytes: int      # breadth-first traffic of this stack
+    hbm_depth_bytes: int        # planned depth-first traffic
+
+
+@dataclasses.dataclass(frozen=True)
+class CoverageReport:
+    """What the optimizer captured — the ``report()``/``explain()`` payload.
+
+    ``capture_ratio`` is computed over the ops that *could* have been
+    captured: everything except the backbone kinds (matmul / conv /
+    attention / ssd / embed), which the paper's optimizer leaves untouched
+    by design.  ``n_opaque`` counts frontend fallbacks — ops that stayed
+    OPAQUE because no lifting rule recognized them.
+    """
+
+    n_ops: int
+    n_captured: int
+    n_opaque: int
+    n_backbone: int
+    n_stacks: int
+    capture_ratio: float
+    stacks: tuple[StackCoverage, ...]
+    n_synthetic: int = 0        # tracer plumbing (bind/proj), not fn ops
+
+    def __str__(self) -> str:
+        lines = [
+            f"ops total={self.n_ops}  captured={self.n_captured}  "
+            f"opaque-fallback={self.n_opaque}  backbone={self.n_backbone}  "
+            f"stacks={self.n_stacks}  capture_ratio="
+            f"{100.0 * self.capture_ratio:.1f}%",
+        ]
+        for s in self.stacks:
+            ratio = s.hbm_breadth_bytes / max(s.hbm_depth_bytes, 1)
+            lines.append(
+                f"  stack {s.name:28s} ops={s.n_ops:3d} "
+                f"seqs={s.n_sequences}  HBM "
+                f"{s.hbm_breadth_bytes / 2**20:8.2f} MiB -> "
+                f"{s.hbm_depth_bytes / 2**20:8.2f} MiB  ({ratio:.2f}x)")
+        return "\n".join(lines)
+
+
+def coverage_report(segments, plans: Mapping[int, collapse.CollapsePlan],
+                    shapes: Mapping[str, tuple[int, ...]],
+                    itemsize: int) -> CoverageReport:
+    """Build the per-stack coverage + planned-HBM-traffic report for a
+    rewritten network (shared by :class:`OptimizedNet` and the traced-path
+    ``repro.api.OptimizedFn``)."""
+    n_captured = n_opaque = n_backbone = n_synthetic = 0
+    stacks: list[StackCoverage] = []
+    for idx, seg in enumerate(segments):
+        if seg.is_stack:
+            n_captured += len(seg.stack.ops)
+            plan = plans[idx]
+            in_shapes = {v: tuple(shapes[v]) for v in seg.stack.inputs}
+            bf = resource.breadth_first_traffic(seg.stack, in_shapes,
+                                                itemsize)
+            df = resource.depth_first_traffic(plan, in_shapes, itemsize)
+            stacks.append(StackCoverage(
+                name=seg.stack.name, n_ops=len(seg.stack.ops),
+                kinds=tuple(op.kind.value for op in seg.stack.ops),
+                n_sequences=len(plan.sequences),
+                hbm_breadth_bytes=bf, hbm_depth_bytes=df))
+        elif seg.op.attrs.get("synthetic"):
+            # tracer plumbing (param binds / tuple projections): neither a
+            # recognition failure nor a traced-function op
+            n_synthetic += 1
+        elif seg.op.kind in BACKBONE_KINDS:
+            n_backbone += 1
+        else:
+            n_opaque += 1
+    total = n_captured + n_opaque + n_backbone
+    eligible = n_captured + n_opaque
+    return CoverageReport(
+        n_ops=total, n_captured=n_captured, n_opaque=n_opaque,
+        n_backbone=n_backbone, n_stacks=len(stacks),
+        capture_ratio=n_captured / eligible if eligible else 1.0,
+        stacks=tuple(stacks), n_synthetic=n_synthetic)
+
+
+def run_segments(segments, executors: Mapping[int, codegen.Executor],
+                 env: dict, params: Mapping[str, jnp.ndarray]) -> dict:
+    """Execute a rewritten network: stacks through their compiled
+    executors, opaque ops breadth-first through the interpreter.  The one
+    segment-walk shared by :class:`OptimizedNet` and the traced
+    ``repro.api.OptimizedFn``; mutates and returns ``env``."""
+    for idx, seg in enumerate(segments):
+        if seg.is_stack:
+            out = executors[idx]({k: env[k] for k in seg.stack.inputs},
+                                 params)
+            env.update(out)
+        else:
+            env[seg.op.output] = ir.apply_op(seg.op, env, params)
+    return env
 
 
 @dataclasses.dataclass
@@ -50,14 +177,8 @@ class OptimizedNet:
 
     def __call__(self, x: jnp.ndarray,
                  params: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
-        env = {self.graph.input: x}
-        for idx, seg in enumerate(self.segments):
-            if seg.is_stack:
-                out = self.executors[idx](
-                    {k: env[k] for k in seg.stack.inputs}, params)
-                env.update(out)
-            else:
-                env[seg.op.output] = ir.apply_op(seg.op, env, params)
+        env = run_segments(self.segments, self.executors,
+                           {self.graph.input: x}, params)
         return env[self.graph.output]
 
     @property
@@ -68,18 +189,29 @@ class OptimizedNet:
     def n_sequences(self) -> int:
         return sum(len(p.sequences) for p in self.plans.values())
 
+    def report(self) -> CoverageReport:
+        """Per-stack coverage + planned HBM traffic of this rewrite."""
+        return coverage_report(self.segments, self.plans, self.shapes,
+                               self.config.itemsize)
 
-def optimize_graph(graph: ir.NetGraph,
-                   input_shape: tuple[int, ...],
-                   config: OptimizeConfig = OptimizeConfig(),
-                   layout: str = "nhwc") -> OptimizedNet:
-    segments = analyzer.analyze(graph, layout=layout)
+    def explain(self) -> str:
+        """Human-readable :meth:`report` (ops captured vs. left opaque,
+        planned HBM traffic per stack)."""
+        return str(self.report())
+
+
+def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
+                   config: OptimizeConfig
+                   ) -> tuple[dict[int, codegen.Executor],
+                              dict[int, collapse.CollapsePlan]]:
+    """Collapse + compile every stack segment against ``config`` (shared by
+    :func:`optimize_graph` and the traced ``repro.api.optimize`` facade —
+    one place threads OptimizeConfig into the collapser/codegen)."""
     executors: dict[int, codegen.Executor] = {}
     plans: dict[int, collapse.CollapsePlan] = {}
-    shapes: dict[str, tuple[int, ...]] = {graph.input: input_shape}
     for idx, seg in enumerate(segments):
         if seg.is_stack:
-            in_shapes = {v: shapes[v] for v in seg.stack.inputs}
+            in_shapes = {v: tuple(shapes[v]) for v in seg.stack.inputs}
             plan = collapse.collapse(
                 seg.stack, in_shapes, config.device,
                 itemsize=config.itemsize,
@@ -88,9 +220,23 @@ def optimize_graph(graph: ir.NetGraph,
             plans[idx] = plan
             executors[idx] = codegen.compile_plan(
                 plan, mode=config.mode, interpret=config.interpret)
+    return executors, plans
+
+
+def optimize_graph(graph: ir.NetGraph,
+                   input_shape: tuple[int, ...],
+                   config: OptimizeConfig = OptimizeConfig(),
+                   layout: str = "nhwc") -> OptimizedNet:
+    segments = analyzer.analyze(graph, layout=layout,  # validates layout
+                                keep=frozenset({graph.output}))
+    shapes: dict[str, tuple[int, ...]] = {graph.input: input_shape}
+    for seg in segments:
+        if seg.is_stack:
+            in_shapes = {v: shapes[v] for v in seg.stack.inputs}
             shapes.update(ir.infer_shapes(seg.stack, in_shapes))
         else:
             _infer_opaque_shape(seg.op, shapes)
+    executors, plans = compile_stacks(segments, shapes, config)
     return OptimizedNet(graph=graph, segments=segments, executors=executors,
                         plans=plans, config=config, shapes=shapes)
 

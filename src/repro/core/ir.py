@@ -205,6 +205,12 @@ class NetGraph:
                 if v not in defined:
                     raise ValueError(
                         f"{self.name}: op {op.name!r} reads undefined value {v!r}")
+            if op.output in defined:
+                # Same SSA-uniqueness contract as StackProgram: tracer-emitted
+                # graphs must be able to trust that a name is defined once.
+                raise ValueError(
+                    f"{self.name}: value {op.output!r} redefined by op "
+                    f"{op.name!r}")
             defined.add(op.output)
         if self.output not in defined:
             raise ValueError(f"{self.name}: output {self.output!r} never defined")

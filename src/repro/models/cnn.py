@@ -1,15 +1,21 @@
-"""The paper's evaluation domain: CNNs as BrainSlug NetGraphs.
+"""The paper's evaluation domain: CNNs, in both front-end styles.
 
-Two constructors:
+IR constructors (hand-built NetGraphs, the original path):
 
 * :func:`block_net` — the paper's §5.1 synthetic benchmark: N consecutive
   ``<MaxPool(3x3, s1, p1), BatchNorm, ReLU>`` blocks (Fig. 10).
 * :func:`vgg_net` — a VGG-style network (conv/BN/ReLU/pool stages + head),
   the §5.2 full-network family stand-in.
 
-Both return ``(NetGraph, params, input_shape)`` ready for
-``repro.core.api.optimize_graph`` — the transparent ``optimize(model)``
-workflow from the paper's Listing 3.
+Plain-jnp twins (the paper's actual Listing-3 experience — write normal
+tensor code, hand it to ``repro.api.optimize``):
+
+* :func:`block_fn` / :func:`vgg_fn` — the same networks as ordinary JAX
+  functions of ``(x, params)``.  They share the parameter dictionaries the
+  IR constructors produce (the architecture is inferred from the param
+  keys), so ``vgg_fn(x, params)`` computes exactly what the hand-built
+  graph computes — and ``api.optimize(vgg_fn, x, params)`` must rediscover
+  the same stacks by tracing.
 """
 from __future__ import annotations
 
@@ -98,3 +104,49 @@ def vgg_net(stages: tuple[int, ...] = (32, 64, 128), in_channels: int = 3,
                          attrs={"features_out": n_classes}))
     graph = ir.NetGraph(name="vgg", input="x", output="y", ops=tuple(ops))
     return graph, params
+
+
+# ---------------------------------------------------------------------------
+# Plain-jnp twins for the traced frontend (repro.api.optimize).
+# ---------------------------------------------------------------------------
+
+def max_pool(x: jnp.ndarray, window: tuple[int, int],
+             stride: tuple[int, int],
+             padding: tuple[int, int]) -> jnp.ndarray:
+    """NHWC max pooling in plain lax (what a user would write)."""
+    ph, pw = padding
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window[0], window[1], 1),
+        (1, stride[0], stride[1], 1),
+        ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+
+
+def block_fn(x: jnp.ndarray, params: dict) -> jnp.ndarray:
+    """Plain-jnp twin of :func:`block_net`: <MaxPool, BN, ReLU> blocks.
+    The block count is inferred from the ``bn{i}_*`` parameter keys."""
+    i = 0
+    while f"bn{i}_s" in params:
+        x = max_pool(x, (3, 3), (1, 1), (1, 1))
+        x = x * params[f"bn{i}_s"] + params[f"bn{i}_o"]
+        x = jax.nn.relu(x)
+        i += 1
+    return x
+
+
+def vgg_fn(x: jnp.ndarray, params: dict) -> jnp.ndarray:
+    """Plain-jnp twin of :func:`vgg_net`: conv/(BN)/ReLU/pool stages, then
+    global-average-pool + linear head.  Stage count and the batch-norm flag
+    are inferred from the parameter keys."""
+    i = 0
+    while f"conv{i}_w" in params:
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}_w"], window_strides=(1, 1),
+            padding=((1, 1), (1, 1)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if f"bn{i}_s" in params:
+            x = x * params[f"bn{i}_s"] + params[f"bn{i}_o"]
+        x = jax.nn.relu(x)
+        x = max_pool(x, (2, 2), (2, 2), (0, 0))
+        i += 1
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["head_w"]

@@ -1,0 +1,548 @@
+"""Oracle tests for the transparent frontend (repro.core.trace +
+repro.api.optimize).
+
+The contract under test: ``optimize(fn, *args)`` returns a drop-in callable
+whose output matches the raw function in all three execution modes, for
+*any* input function — recognized constructs get captured into stacks,
+everything else falls back to OPAQUE but still computes the same thing.
+Property-style oracle suites run randomized CNN / LM-block op chains
+through the tracer and compare against the raw fn (forward and gradients).
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import api as core_api
+from repro.core import codegen, ir, trace
+from repro.models import cnn
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.fixture(autouse=True)
+def _clear_codegen_cache():
+    codegen.clear_cache()
+    yield
+
+
+def _assert_modes_agree(fn, *args, tol=TOL, check_capture=None):
+    """Oracle: traced-then-optimized output equals the raw fn, 3 modes."""
+    ref = jax.tree_util.tree_leaves(fn(*args))
+    nets = {}
+    for mode in ("barrier", "xla", "brainslug"):
+        net = api.optimize(fn, *args, config=api.OptimizeConfig(mode=mode))
+        got = jax.tree_util.tree_leaves(net(*args))
+        assert len(got) == len(ref)
+        for g, r in zip(got, ref):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r), **tol)
+        nets[mode] = net
+    if check_capture is not None:
+        assert nets["xla"].report().capture_ratio >= check_capture
+    return nets
+
+
+# ---------------------------------------------------------------------------
+# Unary recognition: jax.nn activations in all their jaxpr disguises.
+# ---------------------------------------------------------------------------
+
+class TestUnaryRecognition:
+    @pytest.mark.parametrize("fn,name", [
+        (jax.nn.relu, "relu"),
+        (jax.nn.relu6, "relu6"),
+        (lambda x: jax.nn.gelu(x, approximate=True), "gelu"),
+        (lambda x: jax.nn.gelu(x, approximate=False), "gelu_exact"),
+        (jax.nn.silu, "silu"),
+        (jax.nn.softplus, "softplus"),
+        (jax.nn.sigmoid, "sigmoid"),
+        (jnp.tanh, "tanh"),
+        (lambda x: jnp.square(jnp.maximum(x, 0.0)), "squared_relu"),
+        (lambda x: jnp.clip(x, 0.0, 6.0), "relu6"),
+    ])
+    def test_activation_lifts_to_named_unary(self, rng, fn, name):
+        x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        tr = trace.trace(fn, x)
+        assert [(op.kind, op.fn) for op in tr.graph.ops] \
+            == [(ir.OpKind.EW_UNARY, name)]
+        _assert_modes_agree(fn, x, check_capture=1.0)
+
+    @pytest.mark.parametrize("shape", [(2, 2), (1, 3), (16,)])
+    def test_small_tensor_does_not_conflate_activations(self, rng, shape):
+        """A tensor smaller than the probe support must still be probed at
+        every discriminating point (relu vs relu6 diverge only at x > 6)."""
+        x = jnp.asarray(8.0 * rng.standard_normal(shape), jnp.float32)
+        tr = trace.trace(jax.nn.relu6, x)
+        assert [(op.kind, op.fn) for op in tr.graph.ops] \
+            == [(ir.OpKind.EW_UNARY, "relu6")]
+        _assert_modes_agree(jax.nn.relu6, x)
+        tr = trace.trace(jax.nn.relu, x)
+        assert tr.graph.ops[0].fn == "relu"
+
+    def test_unknown_elementwise_chain_still_matches_output(self, rng):
+        """A composition *not* in the table stays decomposed but exact."""
+        def odd(x):
+            return jnp.tanh(x) * 0.5 + jnp.exp(-jnp.abs(x))
+        x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        _assert_modes_agree(odd, x)
+
+
+# ---------------------------------------------------------------------------
+# Structural patterns.
+# ---------------------------------------------------------------------------
+
+class TestStructuralPatterns:
+    def test_batchnorm_inference_becomes_affine(self, rng):
+        def bn(x, s, o):
+            return x * s + o
+        x = jnp.asarray(rng.standard_normal((2, 8, 8, 16)), jnp.float32)
+        s = jnp.asarray(1.0 + 0.1 * rng.standard_normal(16), jnp.float32)
+        o = jnp.asarray(0.1 * rng.standard_normal(16), jnp.float32)
+        tr = trace.trace(bn, x, s, o)
+        assert [op.kind for op in tr.graph.ops] == [ir.OpKind.AFFINE]
+        _assert_modes_agree(bn, x, s, o)
+
+    def test_rms_norm_recognized(self, rng):
+        def rms(x, g):
+            var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+            return x * jax.lax.rsqrt(var + 1e-6) * g
+        x = jnp.asarray(rng.standard_normal((6, 32)), jnp.float32)
+        g = jnp.asarray(1.0 + 0.1 * rng.standard_normal(32), jnp.float32)
+        tr = trace.trace(rms, x, g)
+        kinds = [op.kind for op in tr.graph.ops]
+        assert kinds == [ir.OpKind.ROW_NORM, ir.OpKind.EW_BINARY]
+        assert tr.graph.ops[0].attrs["norm"] == "rms"
+        assert tr.graph.ops[0].attrs["eps"] == pytest.approx(1e-6)
+        _assert_modes_agree(rms, x, g, check_capture=1.0)
+
+    def test_layer_norm_recognized(self, rng):
+        def ln(x):
+            mu = jnp.mean(x, axis=-1, keepdims=True)
+            xc = x - mu
+            var = jnp.mean(jnp.square(xc), axis=-1, keepdims=True)
+            return xc * jax.lax.rsqrt(var + 1e-5)
+        x = jnp.asarray(rng.standard_normal((6, 32)), jnp.float32)
+        tr = trace.trace(ln, x)
+        assert [op.kind for op in tr.graph.ops] == [ir.OpKind.ROW_NORM]
+        assert tr.graph.ops[0].attrs["norm"] == "layer"
+        _assert_modes_agree(ln, x, check_capture=1.0)
+
+    def test_reciprocal_div_not_mistaken_for_mean(self, rng):
+        """`n / sum(x^2)` is a reciprocal, not a mean — the rms matcher
+        must not lift it (div is non-commutative)."""
+        def not_rms(x):
+            r = 32.0 / jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+            return x * jax.lax.rsqrt(r + 1e-6)
+        x = jnp.asarray(rng.standard_normal((6, 32)), jnp.float32)
+        tr = trace.trace(not_rms, x)
+        assert not any(op.kind == ir.OpKind.ROW_NORM for op in tr.graph.ops)
+        _assert_modes_agree(not_rms, x)
+
+    def test_narrow_range_coincidence_not_rewritten(self, rng):
+        """A jitted fn equal to relu only on a bounded range must not be
+        probe-replaced by relu (the probe reaches far-out points)."""
+        inner = jax.jit(lambda v: jnp.where(v > 21.0, 0.0,
+                                            jnp.maximum(v, 0.0)))
+        def f(v):
+            return inner(v) + 1.0
+        x = jnp.asarray([[25.0, -3.0, 1.0, 30.0]], jnp.float32)
+        tr = trace.trace(f, x)
+        # the call must not collapse to a bare relu(+add); the inner
+        # select_n that clamps beyond 21 has to survive
+        assert [op.fn for op in tr.graph.ops] != ["relu", "add"]
+        assert any(op.kind == ir.OpKind.OPAQUE for op in tr.graph.ops)
+        # parity exactly where the coincidence breaks (x > 21)
+        _assert_modes_agree(f, x)
+
+    def test_softmax_trailing_axis_recognized(self, rng):
+        x = jnp.asarray(rng.standard_normal((5, 12)), jnp.float32)
+        fn = lambda v: jax.nn.softmax(v, axis=-1)  # noqa: E731
+        tr = trace.trace(fn, x)
+        assert [op.kind for op in tr.graph.ops] == [ir.OpKind.ROW_SOFTMAX]
+        _assert_modes_agree(fn, x)
+
+    def test_softmax_non_trailing_axis_falls_back_opaque(self, rng):
+        """Layout constraint fails -> OPAQUE ops, output still exact."""
+        x = jnp.asarray(rng.standard_normal((5, 12)), jnp.float32)
+        fn = lambda v: jax.nn.softmax(v, axis=0)  # noqa: E731
+        tr = trace.trace(fn, x)
+        assert any(op.kind == ir.OpKind.OPAQUE for op in tr.graph.ops)
+        assert not any(op.kind == ir.OpKind.ROW_SOFTMAX
+                       for op in tr.graph.ops)
+        _assert_modes_agree(fn, x)
+
+    def test_pools_and_conv_and_matmul(self, rng):
+        def f(x, w, h):
+            x = jax.lax.conv_general_dilated(
+                x, w, (1, 1), ((1, 1), (1, 1)),
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = cnn.max_pool(x, (2, 2), (2, 2), (0, 0))
+            x = jax.lax.reduce_window(
+                x, 0.0, jax.lax.add, (1, 3, 3, 1), (1, 1, 1, 1),
+                ((0, 0), (1, 1), (1, 1), (0, 0))) / 9.0
+            return jnp.mean(x, axis=(1, 2)) @ h
+        x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((3, 3, 3, 8)) * 0.2, jnp.float32)
+        h = jnp.asarray(rng.standard_normal((8, 5)) * 0.3, jnp.float32)
+        tr = trace.trace(f, x, w, h)
+        kinds = [op.kind for op in tr.graph.ops]
+        assert ir.OpKind.CONV2D in kinds
+        assert kinds.count(ir.OpKind.POOL2D) == 2
+        assert ir.OpKind.MATMUL in kinds
+        _assert_modes_agree(f, x, w, h)
+
+
+# ---------------------------------------------------------------------------
+# Conservative fallback: tracing never rejects a function.
+# ---------------------------------------------------------------------------
+
+class TestOpaqueFallback:
+    def test_unrecognizable_primitive_falls_back_and_matches(self, rng):
+        def weird(x):
+            s = jnp.sort(x, axis=-1)            # no lifting rule
+            c = jnp.cumsum(s, axis=-1)          # no lifting rule
+            return jax.nn.relu(c) + jnp.flip(x, axis=-1)
+        x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        tr = trace.trace(weird, x)
+        assert any(op.kind == ir.OpKind.OPAQUE for op in tr.graph.ops)
+        assert any(op.fn == "relu" for op in tr.graph.ops)
+        _assert_modes_agree(weird, x)
+
+    def test_residual_fanout_and_second_leaf_as_value(self, rng):
+        def f(a, b):
+            h = jax.nn.relu(a + b)              # b: non-first leaf as value
+            return h + a                        # residual fan-out of a
+        a = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        _assert_modes_agree(f, a, b)
+
+    def test_custom_vjp_backward_is_preserved(self, rng):
+        """A custom_vjp whose forward looks like relu but defines its own
+        backward (straight-through estimator) must NOT be probe-replaced
+        by the table relu — gradients through the optimized fn must match
+        the raw fn's custom rule."""
+        @jax.custom_vjp
+        def ste_relu(x):
+            return jnp.maximum(x, 0.0)
+
+        def _fwd(x):
+            return ste_relu(x), None
+
+        def _bwd(_, g):
+            return (g,)                       # straight-through: identity
+
+        ste_relu.defvjp(_fwd, _bwd)
+
+        def f(x):
+            return ste_relu(x) * 2.0
+
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        for mode in ("xla", "brainslug"):
+            net = api.optimize(f, x, config=api.OptimizeConfig(mode=mode))
+            np.testing.assert_allclose(np.asarray(net(x)),
+                                       np.asarray(f(x)), **TOL)
+            g1 = jax.grad(lambda v: jnp.sum(net(v)))(x)
+            g2 = jax.grad(lambda v: jnp.sum(f(v)))(x)
+            np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_custom_jvp_standard_activation_still_lifts(self, rng):
+        """jax.nn.relu is custom_jvp with the *standard* derivative — the
+        gradient probe must keep lifting it."""
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        tr = trace.trace(jax.nn.relu, x)
+        assert [op.fn for op in tr.graph.ops] == ["relu"]
+
+    def test_zero_size_input_does_not_crash(self):
+        x = jnp.zeros((0, 4), jnp.float32)
+        net = api.optimize(jax.nn.relu, x)
+        assert net(x).shape == (0, 4)
+
+    def test_bind_ops_not_counted_as_opaque(self, rng):
+        """Tracer plumbing (leaf binds) must not skew capture_ratio."""
+        def f(a, b):
+            return jax.nn.relu(a + b)
+        a = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        net = api.optimize(f, a, b)
+        rep = net.report()
+        assert rep.n_opaque == 0
+        assert rep.n_synthetic == 1           # the bind for leaf b
+        assert rep.capture_ratio == 1.0
+
+    def test_multi_output_mid_stack_value(self, rng):
+        """A traced output with no in-graph consumer, produced mid-run,
+        must escape its stack (analyzer `keep=`) — regression for the
+        KeyError the analyzer's tail-only export used to cause."""
+        def f(x):
+            return jax.nn.relu(x), jnp.tanh(x)
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        _assert_modes_agree(f, x)
+
+        def g(x):
+            h = jax.nn.relu(x)
+            return {"hidden": h, "out": jnp.tanh(h) + 1.0}
+        _assert_modes_agree(g, x)
+
+    def test_pytree_in_and_out(self, rng):
+        def f(x, params):
+            h = jax.nn.relu(x @ params["w"])
+            return {"logits": h, "sorted": jnp.sort(h, axis=-1), "x": x}
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        params = {"w": jnp.asarray(rng.standard_normal((8, 8)) * 0.3,
+                                   jnp.float32)}
+        _assert_modes_agree(f, x, params)
+
+    def test_scalar_chain_stays_opaque_but_exact(self, rng):
+        """0-d values never enter rows stacks (the kernels tile (rows, F))
+        — the whole chain falls back to opaque and still matches."""
+        def loss_like(x):
+            s = jnp.sum(jnp.square(x))
+            return jnp.tanh(s * 0.5) + 1.0
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        net = api.optimize(loss_like, x)
+        # square(x) on the 2-D input is capturable; every 0-d op is not
+        for op in net.graph.ops:
+            if net.shapes[op.output] == ():
+                assert op.kind == ir.OpKind.OPAQUE
+        for seg in net.segments:
+            if seg.is_stack:
+                assert all(net.shapes[op.output] != ()
+                           for op in seg.stack.ops)
+        _assert_modes_agree(loss_like, x)
+
+    def test_integer_gather_input(self, rng):
+        def emb(ids, table):
+            return jax.nn.relu(table[ids])
+        ids = jnp.asarray([[0, 2], [1, 3]], jnp.int32)
+        table = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        _assert_modes_agree(emb, ids, table)
+
+    def test_wrong_call_structure_raises(self, rng):
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        net = api.optimize(jax.nn.relu, x)
+        with pytest.raises(TypeError, match="structure"):
+            net(x, x)
+
+    def test_wrong_leaf_shape_or_dtype_raises(self, rng):
+        """Executors are specialized to the traced avals — a mismatched
+        call fails eagerly with a named error, not inside a kernel."""
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        net = api.optimize(jax.nn.relu, x)
+        with pytest.raises(TypeError, match="traced as"):
+            net(jnp.ones((2, 8), jnp.float32))
+        with pytest.raises(TypeError, match="traced as"):
+            net(jnp.ones((4, 8), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Property-style oracle: randomized CNN / LM-block chains.
+# ---------------------------------------------------------------------------
+
+def _random_cnn_chain(rng, depth: int):
+    """A random plain-jnp CNN tail: conv/bn/act/pool ops, seeded."""
+    acts = [jax.nn.relu, jax.nn.relu6,
+            lambda v: jax.nn.gelu(v, approximate=True), jax.nn.silu]
+    steps = []
+    c = 4
+    for i in range(depth):
+        kind = rng.integers(0, 4)
+        if kind == 0:
+            co = int(rng.choice([4, 8]))
+            w = jnp.asarray(rng.standard_normal((3, 3, c, co))
+                            * (2.0 / (9 * c)) ** 0.5, jnp.float32)
+            steps.append(("conv", w))
+            c = co
+        elif kind == 1:
+            s = jnp.asarray(1.0 + 0.1 * rng.standard_normal(c), jnp.float32)
+            o = jnp.asarray(0.1 * rng.standard_normal(c), jnp.float32)
+            steps.append(("bn", (s, o)))
+        elif kind == 2:
+            steps.append(("act", acts[int(rng.integers(0, len(acts)))]))
+        else:
+            steps.append(("pool", None))
+
+    def f(x):
+        for kind, payload in steps:
+            if kind == "conv":
+                x = jax.lax.conv_general_dilated(
+                    x, payload, (1, 1), ((1, 1), (1, 1)),
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            elif kind == "bn":
+                x = x * payload[0] + payload[1]
+            elif kind == "act":
+                x = payload(x)
+            else:
+                x = cnn.max_pool(x, (3, 3), (1, 1), (1, 1))
+        return x
+    return f
+
+
+def _random_lm_chain(rng, depth: int):
+    d = 16
+    ws = [jnp.asarray(rng.standard_normal((d, d)) * (1.0 / d) ** 0.5,
+                      jnp.float32) for _ in range(depth)]
+    gs = [jnp.asarray(1.0 + 0.1 * rng.standard_normal(d), jnp.float32)
+          for _ in range(depth)]
+    kinds = [int(rng.integers(0, 3)) for _ in range(depth)]
+
+    def f(x):
+        for k, w, g in zip(kinds, ws, gs):
+            if k == 0:                          # rmsnorm + scale + matmul
+                var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+                x = x * jax.lax.rsqrt(var + 1e-6) * g
+                x = x @ w
+            elif k == 1:                        # glu
+                x = jax.nn.silu(x @ w) * (x + g)
+            else:                               # residual act
+                x = x + jax.nn.gelu(x @ w, approximate=True)
+        return x
+    return f
+
+
+class TestRandomizedOracle:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_cnn_chain_oracle(self, seed):
+        rng = np.random.default_rng(100 + seed)
+        f = _random_cnn_chain(rng, depth=int(rng.integers(3, 7)))
+        x = jnp.asarray(rng.standard_normal((2, 8, 8, 4)), jnp.float32)
+        _assert_modes_agree(f, x, tol=dict(rtol=5e-4, atol=5e-4))
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_lm_chain_oracle(self, seed):
+        rng = np.random.default_rng(200 + seed)
+        f = _random_lm_chain(rng, depth=int(rng.integers(2, 5)))
+        x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        _assert_modes_agree(f, x)
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_gradient_parity_differentiable(self, seed):
+        """grad through the traced+optimized net == grad of the raw fn."""
+        rng = np.random.default_rng(300 + seed)
+        f = _random_lm_chain(rng, depth=3)
+        x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        for mode in ("brainslug", "xla"):
+            net = api.optimize(
+                f, x, config=api.OptimizeConfig(mode=mode,
+                                                differentiable=True))
+            g1 = jax.grad(lambda v: jnp.sum(jnp.square(net(v))))(x)
+            g2 = jax.grad(lambda v: jnp.sum(jnp.square(f(v))))(x)
+            np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                       rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# The paper's acceptance bar: VGG through the traced one-liner.
+# ---------------------------------------------------------------------------
+
+class TestVggAcceptance:
+    def test_vgg_fn_traced_all_modes_and_capture(self):
+        _, params = cnn.vgg_net(stages=(16, 32, 64), batch_norm=True)
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16, 3),
+                              jnp.float32)
+        nets = _assert_modes_agree(cnn.vgg_fn, x, params)
+        rep = nets["brainslug"].report()
+        assert rep.capture_ratio >= 0.9          # >=90% of capturable ops
+        assert rep.n_stacks >= 3                 # one per conv stage
+        assert "capture_ratio" in nets["brainslug"].explain()
+
+    def test_traced_matches_handbuilt_graph(self, rng):
+        """The plain-jnp twin and the hand-built IR graph are the same
+        network — and tracing rediscovers the same stack census."""
+        graph, params = cnn.vgg_net(stages=(16, 32), batch_norm=True)
+        x = jnp.asarray(rng.standard_normal((2, 16, 16, 3)), jnp.float32)
+        ir_net = core_api.optimize_graph(graph, x.shape,
+                                         core_api.OptimizeConfig(mode="xla"))
+        traced = api.optimize(cnn.vgg_fn, x, params,
+                              config=api.OptimizeConfig(mode="xla"))
+        np.testing.assert_allclose(np.asarray(traced(x, params)),
+                                   np.asarray(ir_net(x, params)), **TOL)
+        # same number of conv-stage stacks (traced adds the gap-div stack)
+        ir_stage_stacks = ir_net.n_stacks
+        assert traced.n_stacks >= ir_stage_stacks
+
+    def test_block_fn_full_capture(self, rng):
+        _, params = cnn.block_net(4, channels=8)
+        x = jnp.asarray(rng.standard_normal((2, 8, 8, 8)), jnp.float32)
+        nets = _assert_modes_agree(cnn.block_fn, x, params,
+                                   check_capture=1.0)
+        assert nets["xla"].report().n_opaque == 0
+
+    def test_jit_roundtrip(self, rng):
+        _, params = cnn.vgg_net(stages=(16,), batch_norm=True)
+        x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)), jnp.float32)
+        net = api.optimize(cnn.vgg_fn, x, params,
+                           config=api.OptimizeConfig(mode="brainslug"))
+        y = jax.jit(net)(x, params)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(cnn.vgg_fn(x, params)), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Facade: deprecations, eager validation, SSA satellite.
+# ---------------------------------------------------------------------------
+
+class TestFacade:
+    def test_optimize_graph_deprecation_warns_and_delegates(self, rng):
+        graph, params = cnn.block_net(2, channels=8)
+        x = jnp.asarray(rng.standard_normal((1, 8, 8, 8)), jnp.float32)
+        with pytest.warns(DeprecationWarning, match="optimize_graph"):
+            net = api.optimize_graph(graph, x.shape,
+                                     api.OptimizeConfig(mode="xla"))
+        assert isinstance(net, core_api.OptimizedNet)
+
+    def test_optimize_stack_deprecation_warns(self):
+        prog = ir.StackProgram(
+            name="t", inputs=("x",), outputs=("y",), layout="rows",
+            ops=(ir.OpNode(ir.OpKind.EW_UNARY, "r", ("x",), "y",
+                           fn="relu"),))
+        with pytest.warns(DeprecationWarning, match="optimize_stack"):
+            exe = api.optimize_stack(prog, {"x": (8, 16)})
+        out = exe({"x": jnp.ones((8, 16))}, {})
+        assert out["y"].shape == (8, 16)
+
+    def test_core_entry_points_do_not_warn(self, rng):
+        graph, _ = cnn.block_net(2, channels=8)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            core_api.optimize_graph(graph, (1, 8, 8, 8),
+                                    core_api.OptimizeConfig(mode="xla"))
+
+    def test_config_mode_typo_raises_eagerly(self):
+        with pytest.raises(ValueError, match=r"brainslug.*xla.*barrier"):
+            api.OptimizeConfig(mode="brainslg")
+
+    def test_graph_layout_typo_raises_eagerly(self):
+        graph, _ = cnn.block_net(1, channels=8)
+        with pytest.raises(ValueError, match=r"rows.*nhwc.*auto"):
+            core_api.optimize_graph(graph, (1, 8, 8, 8), layout="nwhc")
+
+    def test_config_itemsize_validated(self):
+        with pytest.raises(ValueError, match="itemsize"):
+            api.OptimizeConfig(itemsize=0)
+
+    def test_netgraph_rejects_redefined_value(self):
+        """Satellite: NetGraph now enforces the same SSA uniqueness as
+        StackProgram — tracer-emitted graphs rely on it."""
+        with pytest.raises(ValueError, match="redefined"):
+            ir.NetGraph(
+                name="bad", input="x", output="y",
+                ops=(ir.OpNode(ir.OpKind.EW_UNARY, "a", ("x",), "y",
+                               fn="relu"),
+                     ir.OpNode(ir.OpKind.EW_UNARY, "b", ("y",), "y",
+                               fn="relu")))
+
+    def test_optimized_net_report_parity(self, rng):
+        """OptimizedNet (IR path) exposes the same report()/explain()."""
+        graph, _ = cnn.vgg_net(stages=(16, 32), batch_norm=True)
+        net = core_api.optimize_graph(graph, (1, 16, 16, 3),
+                                      core_api.OptimizeConfig(mode="xla"))
+        rep = net.report()
+        assert rep.n_stacks == net.n_stacks
+        assert rep.n_captured == sum(len(s.stack.ops)
+                                     for s in net.segments if s.is_stack)
+        assert "stack" in net.explain()
