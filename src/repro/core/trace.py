@@ -107,6 +107,28 @@ _CUSTOM_GRAD_CALLS = frozenset({
     "custom_vjp_call", "custom_vjp_call_jaxpr",
 })
 
+#: primitives that change autodiff semantics without changing the forward
+#: values.  A behavioral probe only sees forward values, so a call whose
+#: body contains one of these anywhere must also pass a gradient probe
+#: before it may be replaced — jit(stop_gradient(relu(x))) matches relu's
+#: forward exactly but has a zero backward.
+_GRAD_FENCE_PRIMS = frozenset({"stop_gradient"}) | _CUSTOM_GRAD_CALLS
+
+
+def _has_grad_fence(jaxpr: jcore.Jaxpr) -> bool:
+    """Does ``jaxpr`` (recursively) contain a gradient fence / custom rule?"""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in _GRAD_FENCE_PRIMS:
+            return True
+        for v in eqn.params.values():
+            subs = v if isinstance(v, (tuple, list)) else (v,)
+            for s in subs:
+                if isinstance(s, jcore.ClosedJaxpr):
+                    s = s.jaxpr
+                if isinstance(s, jcore.Jaxpr) and _has_grad_fence(s):
+                    return True
+    return False
+
 
 def _inner_closed_jaxpr(eqn) -> jcore.ClosedJaxpr | None:
     key = _CALL_JAXPR_KEYS.get(eqn.primitive.name)
@@ -267,6 +289,11 @@ def _probe_call(sub: jcore.ClosedJaxpr, ins: list, eqn, ctx: _FlattenCtx
     # don't eagerly execute huge or effectful sub-jaxprs on fabricated data
     if getattr(sub.jaxpr, "effects", None) or len(sub.jaxpr.eqns) > 64:
         return None
+    # a fence (stop_gradient / custom derivative) anywhere inside the call
+    # is invisible to the forward probe — require the gradient probe too,
+    # whatever the outer call primitive is (jit/pjit included)
+    needs_grad_check = (eqn.primitive.name in _CUSTOM_GRAD_CALLS
+                        or _has_grad_fence(sub.jaxpr))
     probes = _probe_batches(aval_in)
 
     def f(x):
@@ -279,9 +306,10 @@ def _probe_call(sub: jcore.ClosedJaxpr, ins: list, eqn, ctx: _FlattenCtx
         return None
     name = _match_unary_values(probes, ys, aval_in)
     if name is not None and name != "identity":
-        if (eqn.primitive.name in _CUSTOM_GRAD_CALLS
-                and not _grad_probe_matches(eqn, ins, aval_in, name)):
-            return None            # forward matches, custom backward differs
+        if (needs_grad_check
+                and not _grad_probe_matches(eqn, ins, aval_in,
+                                            ir._UNARY_FNS[name])):
+            return None            # forward matches, backward differs
         return ("unary", name, src)
     if len(aval_in.shape) >= 2:
         tol = _probe_tol(aval_in)
@@ -294,14 +322,19 @@ def _probe_call(sub: jcore.ClosedJaxpr, ins: list, eqn, ctx: _FlattenCtx
         except Exception:                         # pragma: no cover - defensive
             return None
         if ok:
+            if (needs_grad_check
+                    and not _grad_probe_matches(
+                        eqn, ins, aval_in,
+                        lambda v: jax.nn.softmax(v, axis=-1))):
+                return None        # e.g. jit(stop_gradient(softmax(x)))
             return ("row_softmax", None, src)
     return None
 
 
-def _grad_probe_matches(eqn, ins: list, aval, name: str) -> bool:
-    """Does the call's (possibly custom) backward agree with the table
-    activation's?  Probed at kink-shifted points — the table derivative at
-    an exact kink (relu at 0) is convention, not semantics."""
+def _grad_probe_matches(eqn, ins: list, aval, cand: Callable) -> bool:
+    """Does the call's (possibly fenced / custom) backward agree with the
+    candidate replacement's?  Probed at kink-shifted points — the table
+    derivative at an exact kink (relu at 0) is convention, not semantics."""
     try:
         subfuns, bind_params = eqn.primitive.get_bind_params(
             dict(eqn.params))
@@ -313,15 +346,19 @@ def _grad_probe_matches(eqn, ins: list, aval, name: str) -> bool:
         out = eqn.primitive.bind(*subfuns, *args, **bind_params)
         return out[0] if eqn.primitive.multiple_results else out
 
-    cand = ir._UNARY_FNS[name]
     tol = max(_probe_tol(aval), 1e-4)            # d/dx amplifies probe noise
     for probe in _probe_batches(aval):
         probe = probe + jnp.asarray(0.0137, probe.dtype)   # step off kinks
         try:
             y1, vjp1 = jax.vjp(h, probe)
-            g1 = vjp1(jnp.ones_like(y1))[0]
+            # non-uniform cotangent: at ones, row-normalizing backwards
+            # (softmax: J^T . 1 = 0) are degenerate and a zeroed fence
+            # would be indistinguishable from the candidate
+            ct = (jnp.linspace(0.5, 1.5, y1.size, dtype=jnp.float32)
+                  .reshape(y1.shape).astype(y1.dtype))
+            g1 = vjp1(ct)[0]
             y2, vjp2 = jax.vjp(cand, probe)
-            g2 = vjp2(jnp.ones_like(y2))[0]
+            g2 = vjp2(ct)[0]
         except Exception:
             return False
         if not np.allclose(np.asarray(g1, np.float64),
@@ -361,10 +398,14 @@ _CHAIN_PRIMS = frozenset({
 })
 
 #: shape-compatible single-input atoms structural walkers may hop across
-#: (keepdims re-expansion, dtype normalization, softmax's gradient fence —
-#: the matched IR op reproduces the fenced semantics itself).
-_HOP_PRIMS = frozenset({"broadcast_in_dim", "convert_element_type",
-                        "stop_gradient"})
+#: (keepdims re-expansion, dtype normalization).  ``stop_gradient`` is
+#: deliberately absent — same rule as _CHAIN_PRIMS: a structural match
+#: only checks forward dataflow, so hopping a user gradient fence would
+#: rewrite e.g. ``x * stop_gradient(rsqrt(mean(x^2)+eps))`` into a fully
+#: differentiable ROW_NORM.  The one sound exception is softmax's internal
+#: row-max fence (ROW_SOFTMAX reproduces it), which _try_softmax opts into
+#: explicitly via ``hop_stop_gradient``.
+_HOP_PRIMS = frozenset({"broadcast_in_dim", "convert_element_type"})
 
 _COMMUTATIVE = frozenset({"add", "mul", "max", "min"})
 
@@ -464,6 +505,7 @@ class _Builder:
         self._failed_probes: set[int] = set()
         self._names = itertools.count()
         self._ew_src: dict[int, int] = {}
+        self._const_names: dict[int, str] = {}    # id(val) -> param name
 
         if leaf_ids:
             lid = leaf_ids[0]
@@ -520,10 +562,18 @@ class _Builder:
         return self.avals[o].dtype
 
     def _const_param(self, val) -> str:
+        """Param name for a captured constant.  Cached by the value's
+        identity: a constvar shared by several consumers (and speculative
+        as_param calls inside match attempts that later fail) must reuse
+        one entry, not mint a fresh array copy each time."""
+        name = self._const_names.get(id(val))
+        if name is not None:
+            return name
         name = f"c{next(self._names)}"
         arr = jnp.asarray(val)
         self.const_params[name] = arr
         self.param_shapes[name] = tuple(arr.shape)
+        self._const_names[id(val)] = name
         return name
 
     def as_value(self, o) -> str | None:
@@ -729,11 +779,18 @@ class _Builder:
 
     # -- structural walkers ------------------------------------------------
 
-    def _producer_of(self, o, from_idx: int, claim: list[int]
+    def _producer_of(self, o, from_idx: int, claim: list[int], *,
+                     hop_stop_gradient: bool = False
                      ) -> tuple[_Atom, int] | None:
-        """(atom, idx) producing ``o``, hopping over broadcast/convert/
-        stop_gradient atoms (collected into ``claim``).  Every traversed
-        value must be consumed exactly once, by the node we came from."""
+        """(atom, idx) producing ``o``, hopping over broadcast/convert
+        atoms (collected into ``claim``).  Every traversed value must be
+        consumed exactly once, by the node we came from.
+        ``hop_stop_gradient`` additionally hops gradient fences — only
+        sound when the matched IR op reproduces the fence itself
+        (softmax's row-max); every other matcher must leave a fenced
+        subgraph un-lifted so the user's backward survives."""
+        hops = (_HOP_PRIMS | {"stop_gradient"} if hop_stop_gradient
+                else _HOP_PRIMS)
         o = self.resolve(o)
         while isinstance(o, int):
             i = self.producer.get(o)
@@ -742,7 +799,7 @@ class _Builder:
             if self.consumers.get(o, []) != [from_idx]:
                 return None
             a = self.atoms[i]
-            if (a.virtual is None and a.prim.name in _HOP_PRIMS
+            if (a.virtual is None and a.prim.name in hops
                     and len(a.out_ids) == 1):
                 claim.append(i)
                 from_idx = i
@@ -885,8 +942,10 @@ class _Builder:
         a, m = sub.operands
         if not self.valueable(a):
             return False
+        # the row-max walk is the one place a stop_gradient hop is sound:
+        # jax.nn.softmax fences its max, and ROW_SOFTMAX reproduces that
         claim3: list[int] = []
-        got = self._producer_of(m, subi, claim3)
+        got = self._producer_of(m, subi, claim3, hop_stop_gradient=True)
         if got is not None:
             cur, curi = got
             # optional `max(-inf, rowmax)` guard jax.nn.softmax inserts
@@ -896,7 +955,8 @@ class _Builder:
                 claim3.append(curi)
                 vo = [o for o in cur.operands
                       if self._scalar_const(o) != -np.inf][0]
-                got = self._producer_of(vo, curi, claim3)
+                got = self._producer_of(vo, curi, claim3,
+                                        hop_stop_gradient=True)
         if got is None:
             return False
         cur, curi = got
@@ -1261,11 +1321,20 @@ class _Builder:
         a = self.atoms[ri]
         o = self.resolve(a.operands[0])
         out = a.out_ids[0]
-        new_dtype = self.avals[out].dtype
+        out_aval = self.avals[out]
+        new_dtype = out_aval.dtype
+        out_weak = bool(getattr(out_aval, "weak_type", False))
         if isinstance(o, _Const):
+            if out_weak:       # materialized consts are strong: keep fragment
+                return False
             self.redirect[out] = _Const(np.asarray(o.val).astype(new_dtype))
             return True
-        if self._dtype_of(o) == new_dtype:
+        # a same-dtype convert can still be a weak_type normalization, which
+        # changes promotion of downstream user code — redirect only when the
+        # operand's aval is observably identical
+        if (self._dtype_of(o) == new_dtype
+                and bool(getattr(self.avals[o], "weak_type", False))
+                == out_weak):
             self.redirect[out] = o
             return True
         return False                               # real cast: fragment
@@ -1328,14 +1397,18 @@ class _Builder:
                 attrs={"fn": opaque_fn,
                        "out_shape": tuple(self.avals[out_id].shape)}))
             return
-        # multi-result primitive: one holder op + one projection per result
+        # multi-result primitive: one holder op + one projection per result.
+        # The holder's runtime value is a *tuple* of all results; its
+        # recorded shape only feeds byte accounting (resource traffic
+        # models), so charge the summed element count across results.
         holder = self._fresh_value("t")
+        holder_shape = (sum(int(math.prod(tuple(self.avals[oid].shape)))
+                            for oid in a.out_ids),)
         self._append(ir.OpNode(
             ir.OpKind.OPAQUE, self._op_name(prim.name), tuple(in_names),
             holder, params=tuple(p_names),
-            attrs={"fn": opaque_fn,
-                   "out_shape": tuple(self.avals[a.out_ids[0]].shape)}),
-            holder, tuple(self.avals[a.out_ids[0]].shape))
+            attrs={"fn": opaque_fn, "out_shape": holder_shape}),
+            holder, holder_shape)
         for k, oid in enumerate(a.out_ids):
             if not self.consumers.get(oid):
                 continue
@@ -1461,10 +1534,18 @@ def trace(fn: Callable, *example_args) -> TraceResult:
     name = getattr(fn, "__name__", None) or "traced"
     graph = ir.NetGraph(name=f"traced_{name}", input="arg0",
                         output=out_name, ops=tuple(builder.ops))
+    # drop const params no committed op references — matchers register
+    # them speculatively (as_param inside an attempt that then fails), and
+    # an orphan would ride the params dict of every optimized call
+    used = {p for op in builder.ops for p in op.params}
+    const_params = {k: v for k, v in builder.const_params.items()
+                    if k in used}
+    param_shapes = {k: v for k, v in builder.param_shapes.items()
+                    if k not in builder.const_params or k in used}
     return TraceResult(
         graph=graph, shapes=builder.shapes,
-        param_shapes=builder.param_shapes,
-        const_params=builder.const_params, n_leaves=len(leaves),
+        param_shapes=param_shapes,
+        const_params=const_params, n_leaves=len(leaves),
         leaf_avals=tuple((tuple(v.aval.shape), np.dtype(v.aval.dtype))
                          for v in closed.jaxpr.invars),
         in_tree=in_tree, out_tree=store["out_tree"],

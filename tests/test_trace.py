@@ -197,6 +197,131 @@ class TestStructuralPatterns:
 
 
 # ---------------------------------------------------------------------------
+# Gradient fences: stop_gradient must survive structural rewriting.
+# ---------------------------------------------------------------------------
+
+class TestStopGradientFences:
+    """Structural matchers must not hop a user's stop_gradient: a match
+    only checks forward dataflow, so lifting a fenced subgraph into a
+    differentiable IR op passes every forward-parity oracle while silently
+    changing the backward.  Only softmax's internal row-max fence (which
+    ROW_SOFTMAX reproduces) may be hopped."""
+
+    def _assert_grad_parity(self, fn, *args):
+        for mode in ("barrier", "xla"):
+            net = api.optimize(fn, *args,
+                               config=api.OptimizeConfig(mode=mode))
+            g1 = jax.grad(lambda *a: jnp.sum(net(*a)))(*args)
+            g2 = jax.grad(lambda *a: jnp.sum(fn(*a)))(*args)
+            np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_fenced_rms_scale_not_lifted_to_row_norm(self, rng):
+        """x * stop_gradient(rsqrt(mean(x^2)+eps)) — normalization with a
+        frozen scale.  ROW_NORM would differentiate through the rsqrt."""
+        def frozen_scale(x):
+            var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+            return x * jax.lax.stop_gradient(jax.lax.rsqrt(var + 1e-6))
+        x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        tr = trace.trace(frozen_scale, x)
+        assert not any(op.kind == ir.OpKind.ROW_NORM for op in tr.graph.ops)
+        _assert_modes_agree(frozen_scale, x)
+        self._assert_grad_parity(frozen_scale, x)
+
+    def test_fenced_scale_shift_not_lifted_to_affine(self, rng):
+        """stop_gradient(x*s)+b must not become a differentiable AFFINE
+        (grad wrt x is zero through the fence)."""
+        def f(x, s, b):
+            return jax.lax.stop_gradient(x * s) + b
+        x = jnp.asarray(rng.standard_normal((2, 8, 8, 16)), jnp.float32)
+        s = jnp.asarray(1.0 + 0.1 * rng.standard_normal(16), jnp.float32)
+        b = jnp.asarray(0.1 * rng.standard_normal(16), jnp.float32)
+        tr = trace.trace(f, x, s, b)
+        assert not any(op.kind == ir.OpKind.AFFINE for op in tr.graph.ops)
+        _assert_modes_agree(f, x, s, b)
+        self._assert_grad_parity(f, x, s, b)
+
+    def test_softmax_internal_fence_still_hopped(self, rng):
+        """jax.nn.softmax fences its row max; ROW_SOFTMAX reproduces that,
+        so the softmax matcher (alone) keeps hopping stop_gradient — and
+        the gradients agree."""
+        x = jnp.asarray(rng.standard_normal((5, 12)), jnp.float32)
+        fn = lambda v: jax.nn.softmax(v, axis=-1)  # noqa: E731
+        tr = trace.trace(fn, x)
+        assert [op.kind for op in tr.graph.ops] == [ir.OpKind.ROW_SOFTMAX]
+        self._assert_grad_parity(fn, x)
+
+    def test_jitted_fenced_relu_not_probe_replaced(self, rng):
+        """A fence hidden behind a jit/pjit call boundary: the forward
+        probe matches relu exactly, so only the gradient probe can veto
+        the whole-call replacement (pjit is not a custom-grad call).
+        After the veto the call is inlined — the inner relu may still
+        lift, but the stop_gradient itself must survive as an op."""
+        inner = jax.jit(lambda v: jax.lax.stop_gradient(jax.nn.relu(v)))
+
+        def f(x):
+            return inner(x) * 2.0
+
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        tr = trace.trace(f, x)
+        assert any(op.kind == ir.OpKind.OPAQUE
+                   and op.name.startswith("stop_gradient")
+                   for op in tr.graph.ops)
+        _assert_modes_agree(f, x)
+        self._assert_grad_parity(f, x)           # grad is identically zero
+
+    def test_jitted_fenced_softmax_not_probe_replaced(self, rng):
+        """Same hole for the behavioral row_softmax match: the whole call
+        must not become a bare (differentiable) ROW_SOFTMAX — after the
+        gradient-probe veto and inlining, the user's outer stop_gradient
+        survives as an op."""
+        inner = jax.jit(
+            lambda v: jax.lax.stop_gradient(jax.nn.softmax(v, axis=-1)))
+        def f(x):
+            return inner(x) * x      # grad = sg(softmax) alone, not + x.J
+        x = jnp.asarray(rng.standard_normal((5, 12)), jnp.float32)
+        tr = trace.trace(f, x)
+        assert any(op.kind == ir.OpKind.OPAQUE
+                   and op.name.startswith("stop_gradient")
+                   for op in tr.graph.ops)
+        _assert_modes_agree(f, x)
+        self._assert_grad_parity(f, x)
+
+    def test_jitted_plain_activation_still_lifts(self, rng):
+        """The gradient probe must not veto fence-free (or
+        internally-fenced-but-equivalent) jitted calls: jit(relu) and
+        jit(softmax) keep lifting."""
+        jrelu = jax.jit(jax.nn.relu)
+        f = lambda v: jrelu(v)  # noqa: E731
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        tr = trace.trace(f, x)
+        assert any(op.kind == ir.OpKind.EW_UNARY and op.fn == "relu"
+                   for op in tr.graph.ops)
+        jsm = jax.jit(lambda v: jax.nn.softmax(v, axis=-1))
+        g = lambda v: jsm(v)  # noqa: E731
+        tr = trace.trace(g, x)
+        assert any(op.kind == ir.OpKind.ROW_SOFTMAX for op in tr.graph.ops)
+        self._assert_grad_parity(g, x)
+
+    def test_jit_wrapped_custom_vjp_backward_preserved(self, rng):
+        """custom_vjp inside a jit boundary: the recursive fence scan must
+        still force the gradient probe."""
+        @jax.custom_vjp
+        def ste_relu(x):
+            return jnp.maximum(x, 0.0)
+
+        ste_relu.defvjp(lambda x: (ste_relu(x), None), lambda _, g: (g,))
+        inner = jax.jit(ste_relu)
+
+        def f(x):
+            return inner(x) * 2.0
+
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        _assert_modes_agree(f, x)
+        self._assert_grad_parity(f, x)
+
+
+# ---------------------------------------------------------------------------
 # Conservative fallback: tracing never rejects a function.
 # ---------------------------------------------------------------------------
 
@@ -261,6 +386,60 @@ class TestOpaqueFallback:
         x = jnp.zeros((0, 4), jnp.float32)
         net = api.optimize(jax.nn.relu, x)
         assert net(x).shape == (0, 4)
+
+    def test_multi_result_holder_accounts_all_results(self, rng):
+        """The tuple-holder of a multi-result opaque primitive must be
+        charged for *all* its results in the shape table (traffic models
+        read net.shapes[op.output]), not just the first one."""
+        def f(x):
+            v, i = jax.lax.top_k(x, 4)
+            return v * 2.0, i
+        x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        tr = trace.trace(f, x)
+        holders = [op for op in tr.graph.ops if op.name.startswith("top_k")]
+        assert len(holders) == 1
+        # values (4,4) + indices (4,4) -> 32 elements, recorded flat
+        assert tr.shapes[holders[0].output] == (32,)
+        _assert_modes_agree(f, x)
+
+    def test_const_params_deduped_and_pruned(self, rng):
+        """A captured constant shared by several consumers gets ONE param
+        entry, and constants registered only by failed match attempts do
+        not ride the params dict of every call."""
+        c = jnp.asarray(rng.standard_normal(16) * 0.1, jnp.float32)
+
+        def f(x):
+            return (x * c) + (x + c)          # c consumed twice
+
+        x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        tr = trace.trace(f, x)
+        used = {p for op in tr.graph.ops for p in op.params}
+        assert set(tr.const_params) <= used    # no orphans shipped
+        const_arrays = [np.asarray(v) for v in tr.const_params.values()]
+        for i, a in enumerate(const_arrays):   # no duplicate copies of c
+            for b in const_arrays[i + 1:]:
+                assert a.shape != b.shape or not np.array_equal(a, b)
+        _assert_modes_agree(f, x)
+
+    def test_same_dtype_convert_keeps_weak_type_normalization(self):
+        """A same-dtype convert_element_type only appears in a jaxpr when
+        it changes weak_type; redirecting past it would hand the caller a
+        weak-typed output and change downstream promotion."""
+        t = jnp.asarray(2.0)                 # Python scalar: weak float32
+        assert t.weak_type
+
+        def f(x, t):
+            return x, t.astype(jnp.float32)  # strips the weak typing
+
+        x = jnp.ones((4, 8), jnp.float32)
+        net = api.optimize(f, x, t)
+        _, got = net(x, t)
+        _, ref = f(x, t)
+        assert not ref.weak_type
+        assert got.weak_type == ref.weak_type
+        # the observable consequence: strong f32 wins the bf16 promotion
+        bf = jnp.ones((), jnp.bfloat16)
+        assert (got + bf).dtype == (ref + bf).dtype == jnp.float32
 
     def test_bind_ops_not_counted_as_opaque(self, rng):
         """Tracer plumbing (leaf binds) must not skew capture_ratio."""
