@@ -9,13 +9,15 @@ import jax
 
 
 def reset_dispatch_stats() -> None:
-    """Zero the fused-stack dispatch counters at a benchmark phase boundary.
-    STATS is a process-global singleton; without this, mode counts recorded
-    while one benchmark traces its executables bleed into the next phase's
-    numbers."""
+    """Zero the fused-stack and kernel-registry dispatch counters at a
+    benchmark phase boundary.  Both STATS are process-global singletons;
+    without this, counts recorded while one benchmark traces its
+    executables bleed into the next phase's numbers."""
+    from repro.core import registry
     from repro.kernels.fused_stack import ops as fused_ops
 
     fused_ops.STATS.reset()
+    registry.STATS.reset()
 
 
 def time_fn(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:

@@ -12,10 +12,33 @@ writes CSVs under results/bench/.
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
 import sys
 import time
 
 from benchmarks import common
+
+
+def write_summary(out_path: str = "BENCH_summary.json",
+                  bench_dir: str = "results/bench") -> dict:
+    """Consolidate every per-bench JSON artifact into one machine-readable
+    summary at the repo root — the perf trajectory downstream tooling (and
+    CI artifact diffing across PRs) consumes."""
+    summary: dict = {"benches": {}}
+    for path in sorted(glob.glob(os.path.join(bench_dir, "*.json"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        try:
+            with open(path) as f:
+                summary["benches"][name] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            summary["benches"][name] = {"error": str(e)}
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=2, default=float)
+    print(f"[benchmarks] wrote {out_path} "
+          f"({len(summary['benches'])} artifacts)")
+    return summary
 
 
 def main(argv=None) -> int:
@@ -55,6 +78,7 @@ def main(argv=None) -> int:
         else:
             print(f"unknown bench {bench!r}", file=sys.stderr)
             return 2
+    write_summary()
     print(f"\n[benchmarks] done in {time.time() - t0:.1f}s")
     return 0
 

@@ -56,6 +56,7 @@ def run_static(server: Server, reqs: list[Request]) -> dict:
     of ``sc.batch`` requests, prompts right-padded to the config width."""
     sc = server.sc
     agg = None
+    dispatch: dict[str, int] = {}
     for lo in range(0, len(reqs), sc.batch):
         batch = reqs[lo: lo + sc.batch]
         prompts = np.zeros((sc.batch, sc.prompt_len), np.int32)
@@ -64,6 +65,11 @@ def run_static(server: Server, reqs: list[Request]) -> dict:
             prompts[i, :len(r.prompt)] = r.prompt
             stops[i] = r.max_new_tokens
         server.generate(prompts, stop_lengths=stops)
+        # per-call snapshot/delta: the module STATS is process-cumulative,
+        # so summing each call's delta is the only way a second benchmark
+        # run in the same process reports its own dispatches
+        for k, v in (server.last_dispatch or {}).items():
+            dispatch[k] = dispatch.get(k, 0) + v
         s = server.last_stats
         n_fill = sc.batch - len(batch)      # partial-last-batch filler rows
         if n_fill:
@@ -92,7 +98,9 @@ def run_static(server: Server, reqs: list[Request]) -> dict:
             completed=agg.completed + s.completed,
             n_requests=agg.n_requests + s.n_requests,
             wall_s=agg.wall_s + s.wall_s)
-    return agg.as_dict()
+    d = agg.as_dict()
+    d["dispatch_delta"] = dispatch
+    return d
 
 
 def run(n_requests: int = 16, slots: int = 4, new_tokens: int = 8,
@@ -115,6 +123,7 @@ def run(n_requests: int = 16, slots: int = 4, new_tokens: int = 8,
     engine = server.engine(slots=slots, prefill_chunk=prefill_chunk)
     engine.run(reqs)
     eng = engine.last_stats.as_dict()
+    eng["dispatch_delta"] = dict(engine.last_dispatch or {})
 
     rows = []
     for driver, d in (("static", static), ("engine", eng)):

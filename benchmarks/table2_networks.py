@@ -137,6 +137,36 @@ def run_cnns(batch=8, hw=32, out_csv="results/bench/table2_cnn.csv",
     return rows
 
 
+def lm_block_registry(cfg, batch: int = 2, seq: int = 8) -> dict:
+    """Kernel-registry coverage + timings for the arch's plain-jnp
+    transformer-block twin — the LM analogue of the CNN rows' tracer
+    coverage: how much of the traced block the registry routes to the
+    dedicated pallas kernels, and what that does to wall time."""
+    d = cfg.d_model
+    nh = max(cfg.n_heads, 1)
+    dff = max(cfg.d_ff, 8)
+    params = lm.transformer_block_params(jax.random.PRNGKey(0), d, nh, dff)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, seq, d),
+                          jnp.float32)
+    fn = lambda xx, pp: lm.transformer_block_fn(xx, pp, n_heads=nh)  # noqa: E731
+    net = facade.optimize(fn, x, params,
+                          config=api.OptimizeConfig(mode="brainslug"))
+    rep = net.report()
+    hits = rep.kernel_hits
+    t_raw = common.time_fn(jax.jit(fn), x, params, repeats=2, warmup=1)
+    t_reg = common.time_fn(jax.jit(lambda xx, pp: net(xx, pp)), x, params,
+                           repeats=2, warmup=1)
+    return {
+        "reg_kernels": rep.n_kernel,
+        "reg_attention": hits.get("attention", 0),
+        "reg_rmsnorm": hits.get("rmsnorm", 0),
+        "reg_swiglu": hits.get("swiglu", 0),
+        "reg_fallbacks": sum(rep.kernel_fallbacks.values()),
+        "t_block_raw_ms": t_raw * 1e3,
+        "t_block_registry_ms": t_reg * 1e3,
+    }
+
+
 def lm_stack_census(cfg) -> tuple[int, int]:
     """(#brainslug-stack applications, #sub-layers) per forward, from the
     layer plan: each sub-block contributes its norm/act/residual chains."""
@@ -235,7 +265,9 @@ def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv",
                 params, batch)
         stacks, layers = lm_stack_census(cfg)
         traffic = lm_block_traffic(get_config(arch))
+        registry_cov = lm_block_registry(cfg)
         row = dict(arch=arch, layers=layers, stacks=stacks,
+                   **registry_cov,
                    t_barrier_ms=t["barrier"] * 1e3,
                    t_fused_ms=t["xla"] * 1e3,
                    wall_speedup_pct=100.0 * (t["barrier"] / t["xla"] - 1.0),
@@ -251,7 +283,11 @@ def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv",
               f"opt_ratio={traffic['opt_ratio']:.2f}x "
               f"pct_of_total={traffic['pct_of_total']:5.1f}% "
               f"total={traffic['total_speedup_pct']:+6.1f}% "
-              f"train={row['train_speedup_pct']:+6.1f}%", flush=True)
+              f"train={row['train_speedup_pct']:+6.1f}% "
+              f"reg_kernels={row['reg_kernels']} "
+              f"(attn={row['reg_attention']} rms={row['reg_rmsnorm']} "
+              f"glu={row['reg_swiglu']} fb={row['reg_fallbacks']})",
+              flush=True)
     common.write_csv(out_csv, list(rows[0]), [list(r.values()) for r in rows])
     common.write_json(out_json, rows)
     return rows

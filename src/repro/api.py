@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import analyzer, codegen, collapse, ir
 from repro.core import api as core_api
+from repro.core import registry as registry_mod
 from repro.core import trace as trace_mod
 
 # Canonical re-exports: the config and report types live with the core
@@ -42,14 +43,18 @@ from repro.core import trace as trace_mod
 OptimizeConfig = core_api.OptimizeConfig
 CoverageReport = core_api.CoverageReport
 StackCoverage = core_api.StackCoverage
+KernelCoverage = core_api.KernelCoverage
 OptimizedNet = core_api.OptimizedNet
 MODES = core_api.MODES
 LAYOUTS = core_api.LAYOUTS
 TraceResult = trace_mod.TraceResult
+KernelType = registry_mod.KernelType
+KernelDispatch = registry_mod.KernelDispatch
 
 __all__ = [
     "optimize", "OptimizedFn", "OptimizeConfig", "CoverageReport",
-    "StackCoverage", "TraceResult", "MODES", "LAYOUTS",
+    "StackCoverage", "KernelCoverage", "KernelType", "KernelDispatch",
+    "TraceResult", "MODES", "LAYOUTS",
     "optimize_graph", "optimize_stack",
 ]
 
@@ -72,6 +77,9 @@ class OptimizedFn:
         default_factory=dict)          # value name -> shape
     param_shapes: dict[str, tuple[int, ...]] = dataclasses.field(
         default_factory=dict)          # param name -> shape
+    kernel_dispatches: dict[int, registry_mod.KernelDispatch] = \
+        dataclasses.field(default_factory=dict)
+    kernel_matches: tuple = ()         # registry KernelMatch records
 
     def __call__(self, *args):
         tr = self.trace_result
@@ -123,10 +131,13 @@ class OptimizedFn:
         return sum(len(p.sequences) for p in self.plans.values())
 
     def report(self) -> CoverageReport:
-        """Per-stack coverage: ops captured vs. left opaque, planned HBM
-        traffic (from the :mod:`repro.core.resource` model)."""
+        """Per-stack coverage (ops captured vs. left opaque, planned HBM
+        traffic from the :mod:`repro.core.resource` model) plus per-kernel
+        registry hit counts with the backend that actually ran — a
+        constraint-driven ref fallback is recorded, never silent."""
         return core_api.coverage_report(self.segments, self.plans,
-                                        self.shapes, self.config.itemsize)
+                                        self.shapes, self.config.itemsize,
+                                        kernel_dispatch=self.kernel_dispatches)
 
     def explain(self) -> str:
         """Human-readable :meth:`report`."""
@@ -144,16 +155,25 @@ def optimize(fn: Callable, *example_args: Any,
     (see :meth:`OptimizedFn.report`).
     """
     tr = trace_mod.trace(fn, *example_args)
+    # registry pass: backbone clusters a depth-first stack can't absorb
+    # (attention / rmsnorm / swiglu / vocab-CE) dispatch to the dedicated
+    # kernels instead of replaying OPAQUE prim.bind soup
+    matches: tuple = ()
+    if config.kernel_registry:
+        tr, matches = registry_mod.rewrite(tr, mode=config.mode)
     # every traced output must survive the rewrite, even one produced
     # mid-stack with no in-graph consumer (stack executors only
     # materialize their declared outputs)
     keep = frozenset(ref for kind, ref in tr.out_refs if kind == "env")
     segments = analyzer.analyze(tr.graph, layout="auto", keep=keep)
-    executors, plans = core_api.compile_stacks(segments, tr.shapes, config)
+    executors, plans, dispatches = core_api.compile_stacks(
+        segments, tr.shapes, config)
     return OptimizedFn(trace_result=tr, segments=segments,
                        executors=executors, plans=plans, config=config,
                        shapes=dict(tr.shapes),
-                       param_shapes=dict(tr.param_shapes))
+                       param_shapes=dict(tr.param_shapes),
+                       kernel_dispatches=dispatches,
+                       kernel_matches=matches)
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,10 @@
 """BrainSlug core: the paper's contribution as a composable JAX module.
 
 Pipeline (paper Fig. 8): transparent frontend (:mod:`trace`, lifts plain
-JAX callables) or hand-built IR (:mod:`ir`) -> Network Analyzer
-(:mod:`analyzer`) -> Collapser (:mod:`collapse`, :mod:`resource`) -> Code
-Generator (:mod:`codegen`) -> Scheduler (:mod:`scheduler`).  Public entry
-point: :func:`repro.api.optimize`.
+JAX callables) -> kernel registry (:mod:`registry`, rewrites backbone
+clusters onto the dedicated pallas kernels) or hand-built IR (:mod:`ir`)
+-> Network Analyzer (:mod:`analyzer`) -> Collapser (:mod:`collapse`,
+:mod:`resource`) -> Code Generator (:mod:`codegen`) -> Scheduler
+(:mod:`scheduler`).  Public entry point: :func:`repro.api.optimize`.
 """
 from repro.core import ir, analyzer, collapse, resource  # noqa: F401

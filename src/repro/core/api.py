@@ -20,6 +20,7 @@ from typing import Mapping
 import jax.numpy as jnp
 
 from repro.core import analyzer, codegen, collapse, ir, resource
+from repro.core import registry as registry_mod
 
 #: Execution modes an OptimizeConfig accepts (validated eagerly — a typo
 #: used to surface only deep inside codegen, as an opaque dispatch error).
@@ -40,6 +41,15 @@ class OptimizeConfig:
     # the recomputed forward chain *and* live cotangents in VMEM, so
     # differentiable plans get smaller tiles / earlier sequence splits.
     differentiable: bool = False
+    # Rewrite traced OPAQUE backbone clusters (attention / rmsnorm /
+    # swiglu / vocab-CE) onto the dedicated kernels via the registry
+    # (repro.core.registry); only affects the traced repro.api.optimize
+    # path.
+    kernel_registry: bool = True
+    # LRU bound for the compiled-executor caches (codegen code cache and
+    # the fused fwd+bwd pair cache).  Generous by default; a long-lived
+    # serve process cycling through shape signatures stays bounded.
+    code_cache_size: int = 256
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
@@ -48,6 +58,11 @@ class OptimizeConfig:
         if not isinstance(self.itemsize, int) or self.itemsize <= 0:
             raise ValueError(
                 f"itemsize must be a positive int, got {self.itemsize!r}")
+        if not isinstance(self.code_cache_size, int) \
+                or self.code_cache_size < 1:
+            raise ValueError(
+                f"code_cache_size must be a positive int, got "
+                f"{self.code_cache_size!r}")
 
 
 #: OpKinds the paper leaves untouched by design ("Convolution and linear
@@ -72,14 +87,27 @@ class StackCoverage:
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelCoverage:
+    """One registry-dispatched KERNEL op in the rewritten network."""
+
+    op_name: str
+    kernel: str                 # registry id: attention / rmsnorm / ...
+    backend: str                # 'pallas' | 'ref'
+    fallback_reason: str | None = None   # why ref ran (None for pallas)
+
+
+@dataclasses.dataclass(frozen=True)
 class CoverageReport:
     """What the optimizer captured — the ``report()``/``explain()`` payload.
 
     ``capture_ratio`` is computed over the ops that *could* have been
     captured: everything except the backbone kinds (matmul / conv /
     attention / ssd / embed), which the paper's optimizer leaves untouched
-    by design.  ``n_opaque`` counts frontend fallbacks — ops that stayed
-    OPAQUE because no lifting rule recognized them.
+    by design, and KERNEL ops, which the registry already routed to a
+    dedicated kernel.  ``n_opaque`` counts frontend fallbacks — ops that
+    stayed OPAQUE because no lifting rule recognized them.  ``kernels``
+    lists every registry dispatch including the backend that actually ran,
+    so a constraint-driven ref fallback is visible, never silent.
     """
 
     n_ops: int
@@ -90,13 +118,32 @@ class CoverageReport:
     capture_ratio: float
     stacks: tuple[StackCoverage, ...]
     n_synthetic: int = 0        # tracer plumbing (bind/proj), not fn ops
+    n_kernel: int = 0           # registry-dispatched KERNEL ops
+    kernels: tuple[KernelCoverage, ...] = ()
+
+    @property
+    def kernel_hits(self) -> dict[str, int]:
+        """Per-kernel registry hit count (the acceptance-criteria stat)."""
+        hits: dict[str, int] = {}
+        for k in self.kernels:
+            hits[k.kernel] = hits.get(k.kernel, 0) + 1
+        return hits
+
+    @property
+    def kernel_fallbacks(self) -> dict[str, int]:
+        """Per-kernel count of dispatches that ran the ref twin."""
+        falls: dict[str, int] = {}
+        for k in self.kernels:
+            if k.backend != "pallas":
+                falls[k.kernel] = falls.get(k.kernel, 0) + 1
+        return falls
 
     def __str__(self) -> str:
         lines = [
             f"ops total={self.n_ops}  captured={self.n_captured}  "
             f"opaque-fallback={self.n_opaque}  backbone={self.n_backbone}  "
-            f"stacks={self.n_stacks}  capture_ratio="
-            f"{100.0 * self.capture_ratio:.1f}%",
+            f"kernels={self.n_kernel}  stacks={self.n_stacks}  "
+            f"capture_ratio={100.0 * self.capture_ratio:.1f}%",
         ]
         for s in self.stacks:
             ratio = s.hbm_breadth_bytes / max(s.hbm_depth_bytes, 1)
@@ -105,17 +152,28 @@ class CoverageReport:
                 f"seqs={s.n_sequences}  HBM "
                 f"{s.hbm_breadth_bytes / 2**20:8.2f} MiB -> "
                 f"{s.hbm_depth_bytes / 2**20:8.2f} MiB  ({ratio:.2f}x)")
+        for k in self.kernels:
+            note = (f"  (fallback: {k.fallback_reason})"
+                    if k.fallback_reason else "")
+            lines.append(
+                f"  kernel {k.kernel:12s} {k.op_name:28s} "
+                f"backend={k.backend}{note}")
         return "\n".join(lines)
 
 
 def coverage_report(segments, plans: Mapping[int, collapse.CollapsePlan],
                     shapes: Mapping[str, tuple[int, ...]],
-                    itemsize: int) -> CoverageReport:
+                    itemsize: int,
+                    kernel_dispatch: Mapping[
+                        int, registry_mod.KernelDispatch] | None = None
+                    ) -> CoverageReport:
     """Build the per-stack coverage + planned-HBM-traffic report for a
     rewritten network (shared by :class:`OptimizedNet` and the traced-path
     ``repro.api.OptimizedFn``)."""
+    kernel_dispatch = kernel_dispatch or {}
     n_captured = n_opaque = n_backbone = n_synthetic = 0
     stacks: list[StackCoverage] = []
+    kernels: list[KernelCoverage] = []
     for idx, seg in enumerate(segments):
         if seg.is_stack:
             n_captured += len(seg.stack.ops)
@@ -129,6 +187,12 @@ def coverage_report(segments, plans: Mapping[int, collapse.CollapsePlan],
                 kinds=tuple(op.kind.value for op in seg.stack.ops),
                 n_sequences=len(plan.sequences),
                 hbm_breadth_bytes=bf, hbm_depth_bytes=df))
+        elif seg.op.kind == ir.OpKind.KERNEL:
+            d = kernel_dispatch.get(idx)
+            kernels.append(KernelCoverage(
+                op_name=seg.op.name, kernel=seg.op.attrs["kernel"],
+                backend=d.backend.value if d else "unknown",
+                fallback_reason=d.reason if d else None))
         elif seg.op.attrs.get("synthetic"):
             # tracer plumbing (param binds / tuple projections): neither a
             # recognition failure nor a traced-function op
@@ -137,25 +201,29 @@ def coverage_report(segments, plans: Mapping[int, collapse.CollapsePlan],
             n_backbone += 1
         else:
             n_opaque += 1
-    total = n_captured + n_opaque + n_backbone
+    total = n_captured + n_opaque + n_backbone + len(kernels)
     eligible = n_captured + n_opaque
     return CoverageReport(
         n_ops=total, n_captured=n_captured, n_opaque=n_opaque,
         n_backbone=n_backbone, n_stacks=len(stacks),
         capture_ratio=n_captured / eligible if eligible else 1.0,
-        stacks=tuple(stacks), n_synthetic=n_synthetic)
+        stacks=tuple(stacks), n_synthetic=n_synthetic,
+        n_kernel=len(kernels), kernels=tuple(kernels))
 
 
 def run_segments(segments, executors: Mapping[int, codegen.Executor],
                  env: dict, params: Mapping[str, jnp.ndarray]) -> dict:
-    """Execute a rewritten network: stacks through their compiled
-    executors, opaque ops breadth-first through the interpreter.  The one
-    segment-walk shared by :class:`OptimizedNet` and the traced
-    ``repro.api.OptimizedFn``; mutates and returns ``env``."""
+    """Execute a rewritten network: stacks and registry KERNEL ops through
+    their compiled executors, opaque ops breadth-first through the
+    interpreter.  The one segment-walk shared by :class:`OptimizedNet` and
+    the traced ``repro.api.OptimizedFn``; mutates and returns ``env``."""
     for idx, seg in enumerate(segments):
         if seg.is_stack:
             out = executors[idx]({k: env[k] for k in seg.stack.inputs},
                                  params)
+            env.update(out)
+        elif seg.op.kind == ir.OpKind.KERNEL:
+            out = executors[idx]({k: env[k] for k in seg.op.inputs}, params)
             env.update(out)
         else:
             env[seg.op.output] = ir.apply_op(seg.op, env, params)
@@ -174,6 +242,8 @@ class OptimizedNet:
     config: OptimizeConfig
     shapes: dict[str, tuple[int, ...]] = dataclasses.field(
         default_factory=dict)   # value name -> inferred shape
+    kernel_dispatches: dict[int, registry_mod.KernelDispatch] = \
+        dataclasses.field(default_factory=dict)
 
     def __call__(self, x: jnp.ndarray,
                  params: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
@@ -192,7 +262,8 @@ class OptimizedNet:
     def report(self) -> CoverageReport:
         """Per-stack coverage + planned HBM traffic of this rewrite."""
         return coverage_report(self.segments, self.plans, self.shapes,
-                               self.config.itemsize)
+                               self.config.itemsize,
+                               kernel_dispatch=self.kernel_dispatches)
 
     def explain(self) -> str:
         """Human-readable :meth:`report` (ops captured vs. left opaque,
@@ -203,12 +274,16 @@ class OptimizedNet:
 def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
                    config: OptimizeConfig
                    ) -> tuple[dict[int, codegen.Executor],
-                              dict[int, collapse.CollapsePlan]]:
-    """Collapse + compile every stack segment against ``config`` (shared by
-    :func:`optimize_graph` and the traced ``repro.api.optimize`` facade —
-    one place threads OptimizeConfig into the collapser/codegen)."""
+                              dict[int, collapse.CollapsePlan],
+                              dict[int, registry_mod.KernelDispatch]]:
+    """Collapse + compile every stack segment, and compile every registry
+    KERNEL segment, against ``config`` (shared by :func:`optimize_graph`
+    and the traced ``repro.api.optimize`` facade — one place threads
+    OptimizeConfig into the collapser/codegen).  Returns (executors,
+    plans, kernel dispatch records)."""
     executors: dict[int, codegen.Executor] = {}
     plans: dict[int, collapse.CollapsePlan] = {}
+    dispatches: dict[int, registry_mod.KernelDispatch] = {}
     for idx, seg in enumerate(segments):
         if seg.is_stack:
             in_shapes = {v: tuple(shapes[v]) for v in seg.stack.inputs}
@@ -219,8 +294,13 @@ def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
                 differentiable=config.differentiable)
             plans[idx] = plan
             executors[idx] = codegen.compile_plan(
-                plan, mode=config.mode, interpret=config.interpret)
-    return executors, plans
+                plan, mode=config.mode, interpret=config.interpret,
+                cache_size=config.code_cache_size)
+        elif seg.op.kind == ir.OpKind.KERNEL:
+            executors[idx], dispatches[idx] = codegen.compile_kernel_op(
+                seg.op, mode=config.mode, interpret=config.interpret,
+                cache_size=config.code_cache_size)
+    return executors, plans, dispatches
 
 
 def optimize_graph(graph: ir.NetGraph,
@@ -236,9 +316,10 @@ def optimize_graph(graph: ir.NetGraph,
             shapes.update(ir.infer_shapes(seg.stack, in_shapes))
         else:
             _infer_opaque_shape(seg.op, shapes)
-    executors, plans = compile_stacks(segments, shapes, config)
+    executors, plans, dispatches = compile_stacks(segments, shapes, config)
     return OptimizedNet(graph=graph, segments=segments, executors=executors,
-                        plans=plans, config=config, shapes=shapes)
+                        plans=plans, config=config, shapes=shapes,
+                        kernel_dispatches=dispatches)
 
 
 def optimize_stack(program: ir.StackProgram,
@@ -250,7 +331,8 @@ def optimize_stack(program: ir.StackProgram,
         max_steps_per_sequence=config.max_steps_per_sequence,
         differentiable=config.differentiable)
     return codegen.compile_plan(plan, mode=config.mode,
-                                interpret=config.interpret)
+                                interpret=config.interpret,
+                                cache_size=config.code_cache_size)
 
 
 def _infer_opaque_shape(op: ir.OpNode, shapes: dict) -> None:
@@ -265,7 +347,8 @@ def _infer_opaque_shape(op: ir.OpNode, shapes: dict) -> None:
     elif op.kind == ir.OpKind.MATMUL:
         shp = shapes[op.inputs[0]]
         shapes[op.output] = shp[:-1] + (op.attrs["features_out"],)
-    elif op.kind == ir.OpKind.OPAQUE and "out_shape" in op.attrs:
+    elif (op.kind in (ir.OpKind.OPAQUE, ir.OpKind.KERNEL)
+          and "out_shape" in op.attrs):
         shapes[op.output] = tuple(op.attrs["out_shape"])
     else:
         shapes[op.output] = shapes[op.inputs[0]]

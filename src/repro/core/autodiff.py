@@ -112,6 +112,33 @@ def supports(program: ir.StackProgram) -> bool:
                for op in program.ops)
 
 
+def with_ref_vjp(fwd_fn: Callable, ref_fn: Callable) -> Callable:
+    """Wrap a non-differentiable kernel forward with a reference backward.
+
+    Registry kernel entries (``repro.core.registry``) declare where their
+    VJP comes from: the kernel package's existing ``jax.custom_vjp``
+    (attention / rmsnorm / swiglu / vocab-CE all carry one — forward runs
+    the pallas kernel, backward recomputes through the jnp ref twin), or —
+    for an entry whose pallas path has no custom rule yet — this wrapper:
+    forward runs ``fwd_fn``, backward is ``jax.vjp`` of ``ref_fn`` over
+    the same operands.  Both fns take positional arrays and return one
+    array; the schedules differ, the math must not.
+    """
+    @jax.custom_vjp
+    def run(*args):
+        return fwd_fn(*args)
+
+    def _fwd(*args):
+        return fwd_fn(*args), args
+
+    def _bwd(args, g):
+        _, vjp = jax.vjp(ref_fn, *args)
+        return vjp(g)
+
+    run.defvjp(_fwd, _bwd)
+    return run
+
+
 # ---------------------------------------------------------------------------
 # Helpers.
 # ---------------------------------------------------------------------------

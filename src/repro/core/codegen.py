@@ -14,36 +14,99 @@ Sequences run serially, communicating through materialized boundary values
   fusion; the beyond-paper comparison point),
 * ``barrier``   — per-op materialization (the paper's framework baseline).
 
+KERNEL ops (registry-matched backbone regions, :mod:`repro.core.registry`)
+compile here too: :func:`compile_kernel_op` decides the backend (pallas
+kernel vs jnp ref twin) once at compile time and returns an executor that
+participates in the same structural-signature cache, keyed on kernel id +
+operand shapes + static attrs — names are deliberately excluded so two
+traced graphs with identical kernel shapes share one compiled closure.
+
 Generated executables are cached on the program's structural signature —
-the paper generates code once per equivalent stack and reuses it.  The
-fused forward+backward pairs are additionally cached inside
-:mod:`repro.kernels.fused_stack.ops` on the same signature, so two
-structurally identical stacks share one generated pair.
+the paper generates code once per equivalent stack and reuses it.  Both
+caches are **LRU-bounded** (size from ``OptimizeConfig.code_cache_size``):
+a long-lived serve process that keeps seeing new shape signatures must not
+leak an executor per signature.  ``clear_cache()`` resets the dispatch
+STATS counters alongside, so back-to-back benchmark runs cannot read
+stale counts.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Callable, Mapping
 
 import jax.numpy as jnp
 
+from repro.core import autodiff
 from repro.core import collapse as collapse_mod
+from repro.core import ir
+from repro.core import registry as registry_mod
 from repro.kernels.fused_stack import ops as fused_ops
 
 Executor = Callable[[Mapping[str, jnp.ndarray], Mapping[str, jnp.ndarray]],
                     dict[str, jnp.ndarray]]
 
-_CODE_CACHE: dict[tuple, Executor] = {}
+#: LRU over compiled executors (stack plans and kernel dispatches alike).
+_CODE_CACHE: "OrderedDict[tuple, Executor]" = OrderedDict()
+_CACHE_LIMIT = 256
+_LIMIT_PINNED = False          # an explicit set_cache_limit() wins over
+#                                per-config floors until the next one
+
+
+def set_cache_limit(n: int) -> None:
+    """Bound both executor caches (this module's code cache and the fused
+    forward+backward pair cache behind it) to ``n`` entries, evicting
+    least-recently-used entries beyond the bound.  An explicit call pins
+    the limit: later config-driven sizing will not silently undo it."""
+    global _CACHE_LIMIT, _LIMIT_PINNED
+    if n < 1:
+        raise ValueError(f"cache limit must be >= 1, got {n}")
+    _CACHE_LIMIT = n
+    _LIMIT_PINNED = True
+    while len(_CODE_CACHE) > _CACHE_LIMIT:
+        _CODE_CACHE.popitem(last=False)
+    fused_ops.set_cache_limit(n)
+
+
+def _raise_cache_limit_to(n: int) -> None:
+    """Config-driven sizing: the limit is process-global while
+    ``code_cache_size`` rides per-OptimizeConfig, so a compile only ever
+    *raises* the bound — otherwise a later optimize() with a smaller
+    config would evict another live net's executors and trigger silent
+    recompilation storms — and never overrides an explicitly pinned
+    operator limit (:func:`set_cache_limit`)."""
+    global _CACHE_LIMIT
+    if _LIMIT_PINNED or n <= _CACHE_LIMIT:
+        return
+    _CACHE_LIMIT = n
+    fused_ops.set_cache_limit(n)
+
+
+def _cache_get(key: tuple):
+    hit = _CODE_CACHE.get(key)
+    if hit is not None:
+        _CODE_CACHE.move_to_end(key)
+    return hit
+
+
+def _cache_put(key: tuple, value) -> None:
+    _CODE_CACHE[key] = value
+    _CODE_CACHE.move_to_end(key)
+    while len(_CODE_CACHE) > _CACHE_LIMIT:
+        _CODE_CACHE.popitem(last=False)
 
 
 def compile_plan(plan: collapse_mod.CollapsePlan, *, mode: str = "xla",
-                 interpret: bool = True) -> Executor:
+                 interpret: bool = True,
+                 cache_size: int | None = None) -> Executor:
     """Compile a collapse plan into ``executor(inputs, params) -> outputs``."""
+    if cache_size is not None:
+        _raise_cache_limit_to(cache_size)
     # plan.input_shapes keeps same-signature plans with identical tile
     # geometry but different image extents from sharing one executor.
     key = (plan.program.signature(), mode, interpret, plan.input_shapes,
            tuple((s.tile_rows, s.tile_out_h, s.tile_out_w)
                  for s in plan.sequences))
-    cached = _CODE_CACHE.get(key)
+    cached = _cache_get(key)
     if cached is not None:
         return cached
 
@@ -72,10 +135,84 @@ def compile_plan(plan: collapse_mod.CollapsePlan, *, mode: str = "xla",
             env.update(out)
         return {v: env[v] for v in plan.program.outputs}
 
-    _CODE_CACHE[key] = executor
+    _cache_put(key, executor)
     return executor
 
 
+#: KERNEL-op attr keys that are plumbing, not compiled-code parameters.
+_KERNEL_PLUMBING_ATTRS = frozenset({"slots", "kernel"})
+
+
+def compile_kernel_op(op: ir.OpNode, *, mode: str = "xla",
+                      interpret: bool = True,
+                      cache_size: int | None = None
+                      ) -> tuple[Executor, registry_mod.KernelDispatch]:
+    """Compile one registry KERNEL op; returns (executor, dispatch record).
+
+    The backend decision (pallas kernel vs ref twin) is made here, once,
+    from the traced operand shapes — and returned so ``report()`` can
+    surface a constraint-driven fallback instead of hiding it.  The inner
+    compiled closure is positional and cached on kernel id + shapes +
+    static attrs only, so identically-shaped kernel sites across traced
+    graphs share one entry.
+    """
+    if cache_size is not None:
+        _raise_cache_limit_to(cache_size)
+    entry = registry_mod.get(op.attrs["kernel"])
+    dispatch = registry_mod.plan_dispatch(op, mode)
+    static = {k: v for k, v in op.attrs.items()
+              if k not in _KERNEL_PLUMBING_ATTRS}
+    key = ("kernel", entry.name, dispatch.backend.value, interpret,
+           ir._freeze(static))
+    inner = _cache_get(key)
+    if inner is None:
+        backend = dispatch.backend
+        stat_key = f"{entry.name}_{backend.value}"
+        out_shape = tuple(op.attrs["out_shape"])
+        out_dtype = op.attrs["out_dtype"]
+
+        if backend is registry_mod.KernelType.PALLAS:
+            call = lambda *arrays: entry.pallas(list(arrays), static,  # noqa: E731
+                                                interpret)
+            if entry.vjp == "ref":
+                # entry declares no custom rule on its pallas path:
+                # wrap it so jax.grad recomputes through the jnp twin
+                call = autodiff.with_ref_vjp(
+                    call, lambda *arrays: entry.ref(list(arrays), static))
+        else:
+            # the jnp twin differentiates natively under jax.vjp
+            call = lambda *arrays: entry.ref(list(arrays), static)  # noqa: E731
+
+        def inner(*arrays):
+            registry_mod.STATS.record(stat_key)
+            return jnp.reshape(call(*arrays), out_shape).astype(out_dtype)
+
+        _cache_put(key, inner)
+
+    slots = op.attrs["slots"]
+    out_name = op.output
+
+    def executor(inputs: Mapping[str, jnp.ndarray],
+                 params: Mapping[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+        arrays = []
+        for slot in slots:
+            if slot[0] == "in":
+                arrays.append(inputs[slot[1]])
+            else:
+                v = params[slot[1]]
+                if len(slot) > 2 and slot[2] is not None:
+                    shape, dtype = slot[2]     # broadcast-alias view spec
+                    v = jnp.broadcast_to(jnp.asarray(v), shape).astype(dtype)
+                arrays.append(v)
+        return {out_name: inner(*arrays)}
+
+    return executor, dispatch
+
+
 def clear_cache() -> None:
+    """Drop every compiled executor *and* zero the dispatch counters —
+    back-to-back benchmark runs must not read stale counts."""
     _CODE_CACHE.clear()
     fused_ops.clear_executable_cache()
+    fused_ops.STATS.reset()
+    registry_mod.STATS.reset()

@@ -43,6 +43,10 @@ class OpKind(enum.Enum):
     ATTENTION = "attention"
     SSD = "ssd"
     EMBED = "embed"
+    KERNEL = "kernel"            # registry-dispatched backbone region: a
+    # traced OPAQUE cluster rewritten to one of the dedicated pallas
+    # kernels (attention / rmsnorm / swiglu / vocab-CE) by
+    # repro.core.registry; attrs carry the kernel id + static arguments
     OPAQUE = "opaque"            # anything else (kept as a black box)
 
 
@@ -292,6 +296,13 @@ def apply_op(op: OpNode, env: dict[str, jnp.ndarray],
 
     if op.kind == OpKind.OPAQUE and "fn" in op.attrs:
         return op.attrs["fn"](*ins, *ps)
+
+    if op.kind == OpKind.KERNEL:
+        raise NotImplementedError(
+            f"KERNEL op {op.name!r} must be executed through a registry "
+            f"executor (repro.core.codegen.compile_kernel_op), not the "
+            f"interpreter — the dispatch decision (pallas vs ref) is made "
+            f"at compile time")
 
     raise NotImplementedError(f"apply_op cannot execute kind {op.kind}")
 

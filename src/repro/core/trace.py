@@ -456,6 +456,7 @@ class TraceResult:
 
     graph: ir.NetGraph
     shapes: dict[str, tuple[int, ...]]        # value name -> shape
+    dtypes: dict[str, Any]                    # value name -> dtype
     param_shapes: dict[str, tuple[int, ...]]  # param name -> shape
     const_params: dict[str, jnp.ndarray]      # captured consts/literals
     n_leaves: int
@@ -499,6 +500,7 @@ class _Builder:
         self.const_params: dict[str, jnp.ndarray] = {}
         self.param_shapes: dict[str, tuple[int, ...]] = {}
         self.shapes: dict[str, tuple[int, ...]] = {}
+        self.dtypes: dict[str, Any] = {}
         self.ops: list[ir.OpNode] = []
         self.claimed: set[int] = set()
         self.emitted: set[int] = set()
@@ -511,6 +513,7 @@ class _Builder:
             lid = leaf_ids[0]
             self.val_name[lid] = "arg0"
             self.shapes["arg0"] = tuple(self.avals[lid].shape)
+            self.dtypes["arg0"] = self.avals[lid].dtype
         for lid, i in self.leaf_index.items():
             self.param_shapes[f"arg{i}"] = tuple(self.avals[lid].shape)
 
@@ -620,7 +623,7 @@ class _Builder:
             ir.OpKind.OPAQUE, self._op_name("bind"), (), vname,
             params=(pname,),
             attrs={"fn": bind_fn, "out_shape": tuple(shape),
-                   "synthetic": True}), vname, shape)
+                   "synthetic": True}), vname, shape, dtype)
         return vname
 
     def as_param(self, o) -> str | None:
@@ -641,14 +644,17 @@ class _Builder:
         return None
 
     def _append(self, op: ir.OpNode, out_name: str,
-                shape: tuple[int, ...]) -> None:
+                shape: tuple[int, ...], dtype=None) -> None:
         self.ops.append(op)
         self.shapes[out_name] = tuple(shape)
+        if dtype is not None:
+            self.dtypes[out_name] = dtype
 
     def _emit_for(self, out_id: int, op: ir.OpNode) -> None:
         self.ops.append(op)
         self.val_name[out_id] = op.output
         self.shapes[op.output] = tuple(self.avals[out_id].shape)
+        self.dtypes[op.output] = self.avals[out_id].dtype
 
     # -- elementwise-chain machinery ---------------------------------------
 
@@ -1370,6 +1376,21 @@ class _Builder:
         prim, params = a.prim, dict(a.params)
         n_in = len(in_names)
 
+        # Registry-facing metadata: the kernel-registry matchers
+        # (repro.core.registry) pattern-match OPAQUE clusters by primitive
+        # name / params and need each operand's identity back, which the
+        # executable closure otherwise hides.
+        named_slots: list[tuple] = []
+        for slot in slots:
+            if slot[0] == "in":
+                named_slots.append(("in", in_names[slot[1]]))
+            elif slot[0] == "const":
+                named_slots.append(("const", slot[1]))
+            else:
+                named_slots.append(("p", p_names[slot[1]], slot[2]))
+        reg_attrs = {"prim": prim.name, "prim_params": params,
+                     "operand_slots": tuple(named_slots)}
+
         def opaque_fn(*args, _prim=prim, _params=params, _slots=tuple(slots),
                       _n_in=n_in):
             ins, ps = args[:_n_in], args[_n_in:]
@@ -1395,7 +1416,8 @@ class _Builder:
                 ir.OpKind.OPAQUE, self._op_name(prim.name), tuple(in_names),
                 self._fresh_value(), params=tuple(p_names),
                 attrs={"fn": opaque_fn,
-                       "out_shape": tuple(self.avals[out_id].shape)}))
+                       "out_shape": tuple(self.avals[out_id].shape),
+                       **reg_attrs}))
             return
         # multi-result primitive: one holder op + one projection per result.
         # The holder's runtime value is a *tuple* of all results; its
@@ -1543,7 +1565,7 @@ def trace(fn: Callable, *example_args) -> TraceResult:
     param_shapes = {k: v for k, v in builder.param_shapes.items()
                     if k not in builder.const_params or k in used}
     return TraceResult(
-        graph=graph, shapes=builder.shapes,
+        graph=graph, shapes=builder.shapes, dtypes=builder.dtypes,
         param_shapes=param_shapes,
         const_params=const_params, n_leaves=len(leaves),
         leaf_avals=tuple((tuple(v.aval.shape), np.dtype(v.aval.dtype))

@@ -10,23 +10,28 @@ from repro.kernels.attention import flash as flash_mod
 from repro.kernels.attention import ref as ref_mod
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True):
+                    block_k: int = 128, interpret: bool = True,
+                    scale: float | None = None):
+    """Flash forward + reference-recompute backward.  ``scale`` overrides
+    the default ``1/sqrt(head_dim)`` score scaling (the kernel-registry
+    path passes the scale it matched out of the traced graph)."""
     return flash_mod.flash_attention_fwd(
-        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
-        interpret=interpret)
+        q, k, v, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, interpret=interpret)
 
 
-def _fwd(q, k, v, causal, block_q, block_k, interpret):
-    return flash_attention(q, k, v, causal, block_q, block_k, interpret), \
-        (q, k, v)
+def _fwd(q, k, v, causal, block_q, block_k, interpret, scale):
+    return flash_attention(q, k, v, causal, block_q, block_k, interpret,
+                           scale), (q, k, v)
 
 
-def _bwd(causal, block_q, block_k, interpret, res, g):
+def _bwd(causal, block_q, block_k, interpret, scale, res, g):
     q, k, v = res
     _, vjp = jax.vjp(
-        lambda q_, k_, v_: ref_mod.attention_ref(q_, k_, v_, causal=causal),
+        lambda q_, k_, v_: ref_mod.attention_ref(q_, k_, v_, causal=causal,
+                                                 scale=scale),
         q, k, v)
     return vjp(g)
 

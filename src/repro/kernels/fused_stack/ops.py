@@ -25,6 +25,7 @@ backward kernel closure.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Callable, Mapping
 
 import jax
@@ -106,7 +107,21 @@ class FusedExecutable:
     generated_bwd: bool                            # depth-first backward?
 
 
-_EXEC_CACHE: dict[tuple, FusedExecutable] = {}
+#: LRU over generated forward+backward pairs.  Bounded: a long-lived
+#: serve process that keeps producing fresh shape signatures must not
+#: leak one executable per signature (``set_cache_limit`` is driven by
+#: ``OptimizeConfig.code_cache_size`` through the codegen layer).
+_EXEC_CACHE: "OrderedDict[tuple, FusedExecutable]" = OrderedDict()
+_CACHE_LIMIT = 256
+
+
+def set_cache_limit(n: int) -> None:
+    global _CACHE_LIMIT
+    if n < 1:
+        raise ValueError(f"cache limit must be >= 1, got {n}")
+    _CACHE_LIMIT = n
+    while len(_EXEC_CACHE) > _CACHE_LIMIT:
+        _EXEC_CACHE.popitem(last=False)
 
 
 def get_executable(program: ir.StackProgram, *, tile_rows: int = 256,
@@ -121,6 +136,9 @@ def get_executable(program: ir.StackProgram, *, tile_rows: int = 256,
         exe = _build_executable(program, tile_rows, tile_out_h, tile_out_w,
                                 interpret)
         _EXEC_CACHE[key] = exe
+    _EXEC_CACHE.move_to_end(key)
+    while len(_EXEC_CACHE) > _CACHE_LIMIT:
+        _EXEC_CACHE.popitem(last=False)
     return exe
 
 

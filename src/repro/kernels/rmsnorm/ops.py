@@ -36,3 +36,11 @@ def _bwd(eps, block_rows, interpret, res, g):
 
 
 rmsnorm.defvjp(_fwd, _bwd)
+
+
+def rmsnorm_value(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+                  interpret: bool = True):
+    """Normalized value only (no residual stream) — the kernel-registry
+    entry point for the traced ``x * rsqrt(mean(x^2) + eps) * g`` idiom."""
+    y, _ = rmsnorm(x, scale, None, eps, block_rows, interpret)
+    return y

@@ -8,6 +8,10 @@ import jax
 from repro.kernels.swiglu import ref as ref_mod
 from repro.kernels.swiglu import swiglu as kernel_mod
 
+#: Gate activations the fused kernel implements — the kernel registry
+#: only rewrites ``act(gate) * up`` clusters whose act is one of these.
+ACTS = tuple(kernel_mod._ACTS)
+
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def swiglu(gate, up, act: str = "silu", block_rows: int = 256,

@@ -23,3 +23,16 @@ def nll_ref(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray
     lse, gold = ce_ref(h, w, labels)
     mask = (labels >= 0).astype(jnp.float32)
     return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def gold_logp_ref(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Per-token gold log-probability (T,) in f32 — the registry twin of
+    ``take_along_axis(log_softmax(h @ w), labels)``.  Negative labels wrap
+    python-style (``labels + V``), matching ``jnp.take_along_axis``."""
+    v = w.shape[1]
+    wrapped = jnp.where(labels < 0, labels + v, labels)
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, wrapped[:, None], axis=-1)[:, 0]
+    return gold - lse

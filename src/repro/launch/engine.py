@@ -166,6 +166,7 @@ class Engine:
         self.prefill_chunk = prefill_chunk
         self.seed = seed
         self.last_stats: ServeStats | None = None
+        self.last_dispatch: dict[str, int] | None = None
         self._n_runs = 0
         self._step = _jitted_mixed_step(cfg, rt)
         self._reset = _jitted_reset
@@ -217,6 +218,11 @@ class Engine:
             key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
                                      self._n_runs)
         self._n_runs += 1
+        # Module-level STATS is process-cumulative by design; a second
+        # run() in the same process must still report only its own work
+        # (the static-vs-engine benchmark compares per-run decode
+        # slot-steps) — snapshot here, delta at the end.
+        stats_before = STATS.snapshot()
 
         B, C = self.slots, self.prefill_chunk
         queue: collections.deque = collections.deque(
@@ -344,4 +350,5 @@ class Engine:
 
         stats.wall_s = time.perf_counter() - t0
         self.last_stats = stats
+        self.last_dispatch = STATS.delta(stats_before)
         return completions  # type: ignore[return-value]

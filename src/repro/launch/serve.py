@@ -76,6 +76,7 @@ class Server:
         self.rt = RuntimeConfig(mode=sc.mode, interpret=True)
         self.params, _ = lm.init(jax.random.PRNGKey(sc.seed), cfg)
         self.last_stats: ServeStats | None = None
+        self.last_dispatch: dict[str, int] | None = None
         self._n_calls = 0
 
         cfg_, rt_ = self.cfg, self.rt
@@ -173,6 +174,9 @@ class Server:
         stops = np.clip(stops, 0, sc.new_tokens)
         out = np.zeros((b, sc.new_tokens), np.int32)
         stats = ServeStats(n_requests=b, n_slots=b)
+        # per-call dispatch delta: STATS is process-cumulative, a second
+        # generate() must still report only its own dispatches
+        stats_before = STATS.snapshot()
         t0 = time.perf_counter()
 
         # Every request at stop length 0 => nothing to generate: return the
@@ -180,6 +184,7 @@ class Server:
         live_steps = int(stops.max()) if b else 0
         if live_steps == 0:
             self.last_stats = stats
+            self.last_dispatch = STATS.delta(stats_before)
             return out
 
         cache, logits = self.prefill(jnp.asarray(prompts, jnp.int32))
@@ -219,6 +224,7 @@ class Server:
         stats.admitted = b
         stats.wall_s = time.perf_counter() - t0
         self.last_stats = stats
+        self.last_dispatch = STATS.delta(stats_before)
         return out
 
 

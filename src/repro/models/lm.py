@@ -405,6 +405,85 @@ def _decode_sub(kind: str, p, cache, carry, cfg, rt, shared_params=None,
     return (resid, out), cache
 
 
+# ---------------------------------------------------------------------------
+# Plain-jnp twins for the traced frontend (repro.api.optimize) — the LM
+# analogue of models/cnn.py's vgg_fn: ordinary tensor code whose traced
+# graph the kernel registry must rewrite onto the dedicated kernels
+# (attention softmax·V -> flash, rmsnorm·g -> fused rmsnorm, the GLU gate
+# -> fused swiglu, the log_softmax/gather loss tail -> fused vocab-CE).
+# ---------------------------------------------------------------------------
+
+def transformer_block_params(key, d_model: int, n_heads: int, d_ff: int,
+                             dtype=jnp.float32) -> dict:
+    """Parameter dict for :func:`transformer_block_fn` (pre-norm attention
+    + SwiGLU MLP; rms scales initialized near 1)."""
+    del n_heads                     # the layout is head-count agnostic
+    ks = jax.random.split(key, 8)
+    dk = lambda k, i, o: jax.random.normal(k, (i, o), dtype) / (i ** 0.5)
+    return {
+        "norm1_g": 1.0 + 0.1 * jax.random.normal(ks[0], (d_model,), dtype),
+        "wq": dk(ks[1], d_model, d_model),
+        "wk": dk(ks[2], d_model, d_model),
+        "wv": dk(ks[3], d_model, d_model),
+        "wo": dk(ks[4], d_model, d_model),
+        "norm2_g": 1.0 + 0.1 * jax.random.normal(ks[5], (d_model,), dtype),
+        "w_gate": dk(ks[6], d_model, d_ff),
+        "w_up": dk(ks[7], d_model, d_ff),
+        "w_down": dk(jax.random.fold_in(key, 99), d_ff, d_model),
+    }
+
+
+def transformer_block_fn(x: jnp.ndarray, params: dict, *, n_heads: int = 4,
+                         causal: bool = True,
+                         eps: float = 1e-6) -> jnp.ndarray:
+    """Plain-jnp pre-norm transformer block: what a user would write.
+
+    ``x`` is (B, S, D).  Attention is multi-head with an additive causal
+    mask; the MLP is SwiGLU.  ``repro.api.optimize`` of this function must
+    dispatch attention, both rmsnorms and the swiglu gate through the
+    kernel registry and match this raw function to 2e-4.
+    """
+    b, s, d = x.shape
+    dh = d // n_heads
+
+    def rms(v, g):
+        var = jnp.mean(jnp.square(v), axis=-1, keepdims=True)
+        return v * jax.lax.rsqrt(var + eps) * g
+
+    def heads(t):                               # (B,S,D) -> (B,H,S,dh)
+        return t.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+
+    h = rms(x, params["norm1_g"])
+    q, k, v = (heads(h @ params[w]) for w in ("wq", "wk", "wv"))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * (1.0 / (dh ** 0.5))
+    if causal:
+        mask = jnp.where(jnp.arange(s)[:, None] >= jnp.arange(s)[None, :],
+                         0.0, -1e30)
+        scores = scores + mask
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + o @ params["wo"]
+
+    h2 = rms(x, params["norm2_g"])
+    y = jax.nn.silu(h2 @ params["w_gate"]) * (h2 @ params["w_up"])
+    return x + y @ params["w_down"]
+
+
+def ce_loss_fn(h: jnp.ndarray, w: jnp.ndarray,
+               labels: jnp.ndarray) -> jnp.ndarray:
+    """Plain-jnp masked-mean CE tail over (T, D) hiddens and a (D, V)
+    head — the registry rewrites the logits -> log_softmax -> gather core
+    onto the fused vocab-CE kernel (the (T, V) logits never materialize);
+    the mask / mean stay ordinary traced ops."""
+    logits = h @ w
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    gold = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[:, None],
+                               axis=-1)[:, 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(-gold * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
 def decode_step(params, cache: dict, tokens_t: jnp.ndarray,
                 cfg: ModelConfig, rt: RuntimeConfig,
                 active: jnp.ndarray | None = None
