@@ -73,15 +73,30 @@ def run(block_counts=(1, 2, 4, 8, 12, 16, 24, 32, 40), channels=32,
             "fused": api.optimize_graph(
                 graph, x.shape, api.OptimizeConfig(mode="xla")),
         }
-        times, times_train, bytes_ = {}, {}, {}
+        times, times_train, bytes_, jitted = {}, {}, {}, {}
         for name, net in nets.items():
             fn = jax.jit(lambda xx, pp, net=net: net(xx, pp))
+            jitted[name] = fn
             times[name] = common.time_fn(fn, x, params)
             bytes_[name] = common.hlo_cost(
                 lambda xx, pp, net=net: net(xx, pp), x, params)["bytes"]
             # training step (fwd+bwd): grads w.r.t. every parameter
             times_train[name] = common.time_grad_fn(
                 lambda pp, net=net: jnp.sum(jnp.square(net(x, pp))), params)
+
+        # never-slower dispatch decision, per phase: what the autotuner
+        # would commit for this row's shapes (fused only if it measures
+        # no slower than the barrier baseline); cached under results/bench
+        tuned_f = common.autotune_pick(
+            f"fig10/blocks{n}", jitted, (x, params), baseline="barrier",
+            requested="fused")
+        grads = {name: jax.jit(jax.grad(
+                     lambda pp, net=net: jnp.sum(jnp.square(net(x, pp)))))
+                 for name, net in nets.items()}
+        tuned_t = common.autotune_pick(
+            f"fig10/blocks{n}/train", grads, (params,),
+            baseline="barrier", requested="fused")
+        tuned = common.merge_tuned(tuned_f, tuned_t)
 
         row = {
             "blocks": n,
@@ -98,6 +113,7 @@ def run(block_counts=(1, 2, 4, 8, 12, 16, 24, 32, 40), channels=32,
             "t_train_barrier_ms": times_train["barrier"] * 1e3,
             "t_train_fused_ms": times_train["fused"] * 1e3,
             "train_speedup": times_train["barrier"] / times_train["fused"],
+            **tuned,
         }
         rows.append(row)
         print(f"[fig10] blocks={n:3d} seqs(tiny)={row['seq_tiny_unrestricted']:2d} "
@@ -105,7 +121,10 @@ def run(block_counts=(1, 2, 4, 8, 12, 16, 24, 32, 40), channels=32,
               f"tiny={row['traffic_ratio_tiny']:5.2f}x "
               f"max1={row['traffic_ratio_tiny_max1']:5.2f}x "
               f"wall {times['barrier']/times['fused']:.2f}x "
-              f"train {row['train_speedup']:.2f}x", flush=True)
+              f"train {row['train_speedup']:.2f}x "
+              f"tuned={row['chosen_variant']}"
+              f"{' GUARDRAIL' if row['guardrail_trips'] else ''}",
+              flush=True)
     common.write_csv(out_csv, list(rows[0]), [list(r.values()) for r in rows])
     common.write_json(out_json, rows)
     return rows

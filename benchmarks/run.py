@@ -34,6 +34,13 @@ def write_summary(out_path: str = "BENCH_summary.json",
                 summary["benches"][name] = json.load(f)
         except (OSError, json.JSONDecodeError) as e:
             summary["benches"][name] = {"error": str(e)}
+    # the never-slower decision cache the benches populated: named in the
+    # summary so CI uploads it next to the rows it explains
+    cache_dir = common.bench_autotune_cache_dir()
+    entries = sorted(os.path.basename(p) for p in
+                     glob.glob(os.path.join(cache_dir, "*.json")))
+    summary["autotune_cache"] = {"dir": cache_dir, "n_entries": len(entries),
+                                 "entries": entries}
     with open(out_path, "w") as f:
         json.dump(summary, f, indent=2, default=float)
     print(f"[benchmarks] wrote {out_path} "

@@ -125,6 +125,24 @@ def run(n_requests: int = 16, slots: int = 4, new_tokens: int = 8,
     eng = engine.last_stats.as_dict()
     eng["dispatch_delta"] = dict(engine.last_dispatch or {})
 
+    # never-slower driver decision: serve the same queue once more under
+    # each driver through the autotuner (single repeat — these are whole
+    # serving runs, not kernels) and record which one it would commit.
+    # The engine closure builds a fresh engine so repeated measurement
+    # never reuses slot state.
+    def _drive_static():
+        return run_static(server, reqs)["wall_s"]
+
+    def _drive_engine():
+        e = server.engine(slots=slots, prefill_chunk=prefill_chunk)
+        e.run(reqs)
+        return e.last_stats.wall_s
+
+    tuned = common.autotune_pick(
+        f"serve/{arch}/{mode}/slots{slots}/req{n_requests}",
+        {"static": _drive_static, "engine": _drive_engine}, (),
+        baseline="static", requested="engine", repeats=1, warmup=0)
+
     rows = []
     for driver, d in (("static", static), ("engine", eng)):
         # explicit keys last: the static driver's ServeStats counts the
@@ -133,7 +151,7 @@ def run(n_requests: int = 16, slots: int = 4, new_tokens: int = 8,
         row = {**d, "driver": driver, "arch": arch, "mode": mode,
                "slots": slots, "n_requests": n_requests,
                "new_tokens_max": new_tokens,
-               "prompt_lens": list(prompt_lens)}
+               "prompt_lens": list(prompt_lens), **tuned}
         rows.append(row)
         print(f"  {driver:7s}: {d['generated_tokens']} tokens in "
               f"{d['wall_s']:.2f}s ({d['generated_tokens_per_s']:.1f} tok/s), "
@@ -143,7 +161,9 @@ def run(n_requests: int = 16, slots: int = 4, new_tokens: int = 8,
     speedup = (static["wall_s"] / eng["wall_s"]) if eng["wall_s"] else 0.0
     waste = static["decode_slot_steps"] - eng["decode_slot_steps"]
     print(f"  engine removes {waste} padded decode slot-steps; "
-          f"wall speedup {speedup:.2f}x")
+          f"wall speedup {speedup:.2f}x; autotune commits "
+          f"{tuned['chosen_variant']}"
+          f"{' (GUARDRAIL)' if tuned['guardrail_trips'] else ''}")
     common.write_json(out_path, rows)
     print(f"  wrote {out_path}")
     return rows

@@ -97,9 +97,9 @@ def run_cnns(batch=8, hw=32, out_csv="results/bench/table2_cnn.csv",
         nets = {m: facade.optimize(fn, x, params,
                                    config=api.OptimizeConfig(mode=m))
                 for m in ("barrier", "xla")}
-        t = {m: common.time_fn(jax.jit(lambda xx, pp, net=net: net(xx, pp)),
-                               x, params)
-             for m, net in nets.items()}
+        jitted = {m: jax.jit(lambda xx, pp, net=net: net(xx, pp))
+                  for m, net in nets.items()}
+        t = {m: common.time_fn(jitted[m], x, params) for m in nets}
         # training step (fwd+bwd) under both schedules
         tt = {m: common.time_grad_fn(
                   lambda pp, net=net: jnp.sum(jnp.square(net(x, pp))),
@@ -107,6 +107,18 @@ def run_cnns(batch=8, hw=32, out_csv="results/bench/table2_cnn.csv",
               for m, net in nets.items()}
         traffic = cnn_schedule_traffic(nets["xla"], params)
         cov = nets["xla"].report()
+        tuned_f = common.autotune_pick(
+            f"table2-cnn/{name}", {"barrier": jitted["barrier"],
+                                   "fused": jitted["xla"]},
+            (x, params), baseline="barrier", requested="fused")
+        grads = {m: jax.jit(jax.grad(
+                     lambda pp, net=net: jnp.sum(jnp.square(net(x, pp)))))
+                 for m, net in nets.items()}
+        tuned_t = common.autotune_pick(
+            f"table2-cnn/{name}/train", {"barrier": grads["barrier"],
+                                         "fused": grads["xla"]},
+            (params,), baseline="barrier", requested="fused")
+        tuned = common.merge_tuned(tuned_f, tuned_t)
         row = dict(network=name, ops=total, optimizable=opt, stacks=stacks,
                    opt_pct=100.0 * opt / total,
                    trace_ops=cov.n_ops,
@@ -123,7 +135,8 @@ def run_cnns(batch=8, hw=32, out_csv="results/bench/table2_cnn.csv",
                                               - 1.0),
                    opt_traffic_ratio=traffic["opt_ratio"],
                    pct_of_total=traffic["pct_of_total"],
-                   total_speedup_pct=traffic["total_speedup_pct"])
+                   total_speedup_pct=traffic["total_speedup_pct"],
+                   **tuned)
         rows.append(row)
         print(f"[table2-cnn] {name:12s} ops={total:3d} opt={opt:3d} "
               f"stacks={stacks:2d} "
@@ -250,10 +263,11 @@ def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv",
         batch = {k: jnp.asarray(v) for k, v in
                  data_mod.synth_batch(cfg, shape, 0).items()}
         params, _ = lm.init(jax.random.PRNGKey(0), cfg)
-        t, tt, b = {}, {}, {}
+        t, tt, b, jitted = {}, {}, {}, {}
         for mode in ("barrier", "xla"):
             rt = RuntimeConfig(mode=mode)
             fn = jax.jit(lambda p, bb, rt=rt: lm.loss_fn(p, bb, cfg, rt)[0])
+            jitted[mode] = fn
             t[mode] = common.time_fn(fn, params, batch)
             b[mode] = common.hlo_cost(
                 lambda p, bb, rt=rt: lm.loss_fn(p, bb, cfg, rt)[0],
@@ -266,6 +280,19 @@ def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv",
         stacks, layers = lm_stack_census(cfg)
         traffic = lm_block_traffic(get_config(arch))
         registry_cov = lm_block_registry(cfg)
+        tuned_f = common.autotune_pick(
+            f"table2-lm/{arch}", {"barrier": jitted["barrier"],
+                                  "fused": jitted["xla"]},
+            (params, batch), baseline="barrier", requested="fused")
+        grads = {m: jax.jit(jax.grad(
+                     lambda p, bb, rt=RuntimeConfig(mode=m):
+                     lm.loss_fn(p, bb, cfg, rt)[0]))
+                 for m in ("barrier", "xla")}
+        tuned_t = common.autotune_pick(
+            f"table2-lm/{arch}/train", {"barrier": grads["barrier"],
+                                        "fused": grads["xla"]},
+            (params, batch), baseline="barrier", requested="fused")
+        tuned = common.merge_tuned(tuned_f, tuned_t)
         row = dict(arch=arch, layers=layers, stacks=stacks,
                    **registry_cov,
                    t_barrier_ms=t["barrier"] * 1e3,
@@ -277,7 +304,8 @@ def run_lms(steps_batch=2, seq=64, out_csv="results/bench/table2_lm.csv",
                                               - 1.0),
                    opt_traffic_ratio=traffic["opt_ratio"],
                    pct_of_total=traffic["pct_of_total"],
-                   total_speedup_pct=traffic["total_speedup_pct"])
+                   total_speedup_pct=traffic["total_speedup_pct"],
+                   **tuned)
         rows.append(row)
         print(f"[table2-lm] {arch:26s} stacks={stacks:4d} "
               f"opt_ratio={traffic['opt_ratio']:.2f}x "

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import analyzer, codegen, collapse, ir
 from repro.core import api as core_api
+from repro.core import autotune as autotune_mod
 from repro.core import registry as registry_mod
 from repro.core import trace as trace_mod
 
@@ -80,6 +81,14 @@ class OptimizedFn:
     kernel_dispatches: dict[int, registry_mod.KernelDispatch] = \
         dataclasses.field(default_factory=dict)
     kernel_matches: tuple = ()         # registry KernelMatch records
+    #: Committed autotune decisions by segment index; -1 is the
+    #: function-level floor (optimized vs the raw traced callable).
+    autotune_decisions: dict[int, autotune_mod.Decision] = \
+        dataclasses.field(default_factory=dict)
+    #: Set when the function-level floor measured the whole rewrite
+    #: slower than the raw function: __call__ delegates to the raw
+    #: callable (still validated) — never-slower, end to end.
+    passthrough: Callable | None = None
 
     def __call__(self, *args):
         tr = self.trace_result
@@ -101,6 +110,8 @@ class OptimizedFn:
                     f"traced as {dtype}{list(shape)}, called with "
                     f"{got[1]}{list(got[0])}; re-run optimize() for new "
                     f"shapes/dtypes")
+        if self.passthrough is not None:
+            return self.passthrough(*args)
         params = dict(tr.const_params)
         for i, leaf in enumerate(leaves):
             params[f"arg{i}"] = leaf
@@ -137,7 +148,8 @@ class OptimizedFn:
         constraint-driven ref fallback is recorded, never silent."""
         return core_api.coverage_report(self.segments, self.plans,
                                         self.shapes, self.config.itemsize,
-                                        kernel_dispatch=self.kernel_dispatches)
+                                        kernel_dispatch=self.kernel_dispatches,
+                                        autotune=self.autotune_decisions)
 
     def explain(self) -> str:
         """Human-readable :meth:`report`."""
@@ -166,14 +178,73 @@ def optimize(fn: Callable, *example_args: Any,
     # materialize their declared outputs)
     keep = frozenset(ref for kind, ref in tr.out_refs if kind == "env")
     segments = analyzer.analyze(tr.graph, layout="auto", keep=keep)
-    executors, plans, dispatches = core_api.compile_stacks(
-        segments, tr.shapes, config)
-    return OptimizedFn(trace_result=tr, segments=segments,
-                       executors=executors, plans=plans, config=config,
-                       shapes=dict(tr.shapes),
-                       param_shapes=dict(tr.param_shapes),
-                       kernel_dispatches=dispatches,
-                       kernel_matches=matches)
+    tuner = (autotune_mod.Autotuner.from_config(config)
+             if config.autotune else None)
+    executors, plans, dispatches, tuned = core_api.compile_stacks(
+        segments, tr.shapes, config, param_shapes=tr.param_shapes,
+        tuner=tuner)
+    net = OptimizedFn(trace_result=tr, segments=segments,
+                      executors=executors, plans=plans, config=config,
+                      shapes=dict(tr.shapes),
+                      param_shapes=dict(tr.param_shapes),
+                      kernel_dispatches=dispatches,
+                      kernel_matches=matches, autotune_decisions=tuned)
+    if tuner is not None:
+        _floor_whole_function(tuner, net, fn, example_args, config)
+    return net
+
+
+def _sig_value(v):
+    """Stable attr freeze for cache keys: opaque ops hold replay closures
+    whose default repr embeds a memory address — key on their qualname."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_sig_value(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _sig_value(x)) for k, x in v.items()))
+    if callable(v):
+        return getattr(v, "__qualname__", type(v).__name__)
+    return ir._freeze(v)
+
+
+def _graph_signature(graph: ir.NetGraph) -> str:
+    return repr(tuple(
+        (op.kind.value, op.fn, op.inputs, op.output, op.params,
+         tuple(sorted((k, _sig_value(v)) for k, v in op.attrs.items())))
+        for op in graph.ops))
+
+
+def _floor_whole_function(tuner, net: OptimizedFn, fn: Callable,
+                          example_args: tuple,
+                          config: OptimizeConfig) -> None:
+    """The end-to-end guardrail: measure the whole rewritten callable
+    against the raw traced function on the example args.  When the
+    rewrite loses, ``net`` delegates to the raw callable (per-segment
+    wins cannot always survive whole-graph XLA fusion).  Any failure
+    here leaves the rewrite in place — the floor never raises."""
+    tr = net.trace_result
+    key_obj = {
+        "kind": "function", "name": tr.graph.name,
+        "sig": _graph_signature(tr.graph),
+        "avals": [[list(s), str(d)] for s, d in tr.leaf_avals],
+        "mode": config.mode, "interpret": config.interpret,
+        "differentiable": config.differentiable,
+        "kernel_registry": config.kernel_registry,
+        "backend": jax.default_backend(),
+    }
+    try:
+        builders = {
+            "raw": lambda: [("fwd", jax.jit(fn), example_args)],
+            "optimized": lambda: [("fwd", jax.jit(net), example_args)],
+        }
+        decision = tuner.decide(key_obj, kind="function",
+                                name=tr.graph.name,
+                                requested="optimized", baseline="raw",
+                                builders=builders)
+    except Exception:                    # pragma: no cover - belt&braces
+        return
+    net.autotune_decisions[-1] = decision
+    if decision.variant == "raw":
+        net.passthrough = fn
 
 
 # ---------------------------------------------------------------------------

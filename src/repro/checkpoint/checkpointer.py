@@ -80,35 +80,113 @@ def _gc(directory: str, keep_last: int) -> None:
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
-def latest_step(directory: str) -> int | None:
+class CheckpointError(Exception):
+    """A checkpoint directory failed validation (missing/incomplete
+    manifest, truncated or unreadable leaf, shape/dtype mismatch).  The
+    robust restore path catches this and falls back to the previous
+    complete checkpoint instead of crashing the resume."""
+
+
+def cleanup_orphans(directory: str) -> list[str]:
+    """Remove ``step_*.tmp`` dirs left behind by a crash mid-save.  They
+    are, by construction, never a valid restore source (the atomic rename
+    happens only after the manifest fsync).  Returns the removed paths."""
+    removed = []
     if not os.path.isdir(directory):
-        return None
-    best = None
+        return removed
+    for d in sorted(os.listdir(directory)):
+        if d.startswith("step_") and d.endswith(".tmp"):
+            path = os.path.join(directory, d)
+            shutil.rmtree(path, ignore_errors=True)
+            removed.append(path)
+    return removed
+
+
+def available_steps(directory: str) -> list[int]:
+    """Steps with a manifest present, ascending (``.tmp`` orphans are
+    never counted as available)."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
     for d in os.listdir(directory):
         if d.startswith("step_") and not d.endswith(".tmp"):
             path = os.path.join(directory, d, "manifest.json")
             if os.path.exists(path):
-                best = max(best or -1, int(d.split("_")[1]))
-    return best
+                try:
+                    steps.append(int(d.split("_")[1]))
+                except ValueError:
+                    continue
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str, step: int, like: Any) -> tuple[Any, dict]:
-    """Restore into the structure of ``like``.  Returns (tree, extra)."""
+    """Restore into the structure of ``like``.  Returns (tree, extra).
+
+    Validates before trusting: the manifest must exist, parse, and carry
+    the ``complete`` marker, and every leaf must match the manifest's
+    recorded shape/dtype *and* the shape of ``like`` — a truncated
+    ``.npy`` or a manifest/leaf mismatch raises :class:`CheckpointError`
+    instead of silently restoring garbage."""
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest_path = os.path.join(path, "manifest.json")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointError(
+            f"checkpoint {path}: unreadable manifest ({e})") from e
     if not manifest.get("complete"):
-        raise IOError(f"checkpoint {path} incomplete")
+        raise CheckpointError(f"checkpoint {path} incomplete "
+                              f"(no completion marker)")
+    recorded = manifest.get("leaves", {})
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for kp, leaf in paths:
-        name = "/".join(_key_str(k) for k in kp).replace("/", "__")
-        arr = np.load(os.path.join(path, name + ".npy"))
+        name = "/".join(_key_str(k) for k in kp)
+        fname = os.path.join(path, name.replace("/", "__") + ".npy")
+        spec = recorded.get(name)
+        if spec is None:
+            raise CheckpointError(
+                f"checkpoint {path}: leaf {name!r} missing from manifest")
+        try:
+            arr = np.load(fname)
+        except (OSError, ValueError, EOFError) as e:
+            raise CheckpointError(
+                f"checkpoint {path}: leaf {name!r} unreadable or "
+                f"truncated ({e})") from e
+        if tuple(arr.shape) != tuple(spec.get("shape", ())) \
+                or str(arr.dtype) != spec.get("dtype"):
+            raise CheckpointError(
+                f"checkpoint {path}: leaf {name!r} is "
+                f"{arr.dtype}{list(arr.shape)} on disk but the manifest "
+                f"recorded {spec.get('dtype')}{spec.get('shape')}")
         if tuple(arr.shape) != tuple(np.shape(leaf)):
-            raise ValueError(f"shape mismatch for {name}: "
-                             f"{arr.shape} vs {np.shape(leaf)}")
+            raise CheckpointError(
+                f"checkpoint {path}: shape mismatch for {name}: "
+                f"{arr.shape} vs {np.shape(leaf)}")
         leaves.append(arr.astype(np.asarray(leaf).dtype))
     return treedef.unflatten(leaves), manifest["extra"]
+
+
+def restore_latest(directory: str, like: Any
+                   ) -> tuple[Any, dict, int] | None:
+    """Restore the newest checkpoint that validates, cleaning up crash
+    orphans first and falling back step by step when the latest is
+    corrupt or truncated.  Returns ``(tree, extra, step)``, or None when
+    no complete checkpoint survives validation."""
+    cleanup_orphans(directory)
+    for step in reversed(available_steps(directory)):
+        try:
+            tree, extra = restore(directory, step, like)
+            return tree, extra, step
+        except CheckpointError:
+            continue
+    return None
 
 
 class AsyncCheckpointer:

@@ -20,6 +20,7 @@ from typing import Mapping
 import jax.numpy as jnp
 
 from repro.core import analyzer, codegen, collapse, ir, resource
+from repro.core import autotune as autotune_mod
 from repro.core import registry as registry_mod
 
 #: Execution modes an OptimizeConfig accepts (validated eagerly — a typo
@@ -50,6 +51,24 @@ class OptimizeConfig:
     # the fused fwd+bwd pair cache).  Generous by default; a long-lived
     # serve process cycling through shape signatures stays bounded.
     code_cache_size: int = 256
+    # Measured autotuning (repro.core.autotune): micro-benchmark the
+    # candidate execution variants per segment on the traced shapes and
+    # commit the winner, hard-floored at the barrier/ref baseline so a
+    # losing fused variant degrades gracefully.  Off by default: the
+    # static planner stays deterministic and compile stays cheap unless
+    # the never-slower contract is asked for.
+    autotune: bool = False
+    # Decision-cache directory (None -> $REPRO_AUTOTUNE_CACHE, else
+    # ~/.cache/repro/autotune).  Entries are checksummed and
+    # version-keyed; corrupt or stale files are quarantined, never fatal.
+    autotune_cache_dir: str | None = None
+    autotune_repeats: int = 3        # median-of-k timing
+    autotune_warmup: int = 1         # untimed calls before the k
+    # Per-candidate budget: a non-baseline candidate whose first call
+    # (tracing + compile included) exceeds this is disqualified with a
+    # recorded reason instead of stalling compile time.  The baseline is
+    # exempt — the floor must always exist.
+    autotune_timeout_ms: float | None = 2000.0
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
@@ -63,6 +82,16 @@ class OptimizeConfig:
             raise ValueError(
                 f"code_cache_size must be a positive int, got "
                 f"{self.code_cache_size!r}")
+        if not isinstance(self.autotune_repeats, int) \
+                or self.autotune_repeats < 1:
+            raise ValueError(
+                f"autotune_repeats must be a positive int, got "
+                f"{self.autotune_repeats!r}")
+        if not isinstance(self.autotune_warmup, int) \
+                or self.autotune_warmup < 0:
+            raise ValueError(
+                f"autotune_warmup must be a non-negative int, got "
+                f"{self.autotune_warmup!r}")
 
 
 #: OpKinds the paper leaves untouched by design ("Convolution and linear
@@ -97,6 +126,22 @@ class KernelCoverage:
 
 
 @dataclasses.dataclass(frozen=True)
+class AutotuneCoverage:
+    """One committed autotune decision in the ``report()`` payload."""
+
+    name: str                 # stack / kernel / function label
+    kind: str                 # 'stack' | 'kernel' | 'function' | 'callable'
+    requested: str            # statically configured variant
+    baseline: str             # never-slower floor
+    chosen: str               # what actually runs
+    guardrail_tripped: bool   # the floor overrode the requested variant
+    source: str               # 'measured' | 'cache-mem' | 'cache-disk'
+    measured_ms: tuple = ()   # ((variant, phase, ms), ...)
+    events: tuple = ()        # cache hit/miss/quarantine notes
+    failures: tuple = ()      # ((variant, reason), ...)
+
+
+@dataclasses.dataclass(frozen=True)
 class CoverageReport:
     """What the optimizer captured — the ``report()``/``explain()`` payload.
 
@@ -120,6 +165,18 @@ class CoverageReport:
     n_synthetic: int = 0        # tracer plumbing (bind/proj), not fn ops
     n_kernel: int = 0           # registry-dispatched KERNEL ops
     kernels: tuple[KernelCoverage, ...] = ()
+    autotune: tuple[AutotuneCoverage, ...] = ()
+
+    @property
+    def guardrail_trips(self) -> int:
+        """Decisions where the never-slower floor overrode the requested
+        variant (the autotune acceptance-criteria stat)."""
+        return sum(1 for a in self.autotune if a.guardrail_tripped)
+
+    @property
+    def autotune_cache_hits(self) -> int:
+        return sum(1 for a in self.autotune
+                   if a.source in ("cache-mem", "cache-disk"))
 
     @property
     def kernel_hits(self) -> dict[str, int]:
@@ -158,6 +215,18 @@ class CoverageReport:
             lines.append(
                 f"  kernel {k.kernel:12s} {k.op_name:28s} "
                 f"backend={k.backend}{note}")
+        for a in self.autotune:
+            trip = "  GUARDRAIL" if a.guardrail_tripped else ""
+            times = "  ".join(f"{v}/{p}={ms:.3f}ms"
+                              for v, p, ms in a.measured_ms)
+            lines.append(
+                f"  autotune {a.kind:8s} {a.name:24s} "
+                f"{a.requested} -> {a.chosen} [{a.source}]{trip}"
+                + (f"  {times}" if times else ""))
+            for ev in a.events:
+                lines.append(f"    note: {ev}")
+            for variant, why in a.failures:
+                lines.append(f"    candidate {variant} failed: {why}")
         return "\n".join(lines)
 
 
@@ -165,12 +234,23 @@ def coverage_report(segments, plans: Mapping[int, collapse.CollapsePlan],
                     shapes: Mapping[str, tuple[int, ...]],
                     itemsize: int,
                     kernel_dispatch: Mapping[
-                        int, registry_mod.KernelDispatch] | None = None
+                        int, registry_mod.KernelDispatch] | None = None,
+                    autotune: Mapping[
+                        int, autotune_mod.Decision] | None = None
                     ) -> CoverageReport:
     """Build the per-stack coverage + planned-HBM-traffic report for a
     rewritten network (shared by :class:`OptimizedNet` and the traced-path
-    ``repro.api.OptimizedFn``)."""
+    ``repro.api.OptimizedFn``).  ``autotune`` maps segment index (or -1
+    for the function-level floor) to its committed decision."""
     kernel_dispatch = kernel_dispatch or {}
+    tuned = tuple(
+        AutotuneCoverage(
+            name=d.name, kind=d.kind, requested=d.requested,
+            baseline=d.baseline, chosen=d.variant,
+            guardrail_tripped=d.guardrail_tripped, source=d.source,
+            measured_ms=d.measured_ms, events=d.events,
+            failures=d.failures)
+        for _, d in sorted((autotune or {}).items()))
     n_captured = n_opaque = n_backbone = n_synthetic = 0
     stacks: list[StackCoverage] = []
     kernels: list[KernelCoverage] = []
@@ -208,7 +288,7 @@ def coverage_report(segments, plans: Mapping[int, collapse.CollapsePlan],
         n_backbone=n_backbone, n_stacks=len(stacks),
         capture_ratio=n_captured / eligible if eligible else 1.0,
         stacks=tuple(stacks), n_synthetic=n_synthetic,
-        n_kernel=len(kernels), kernels=tuple(kernels))
+        n_kernel=len(kernels), kernels=tuple(kernels), autotune=tuned)
 
 
 def run_segments(segments, executors: Mapping[int, codegen.Executor],
@@ -244,6 +324,8 @@ class OptimizedNet:
         default_factory=dict)   # value name -> inferred shape
     kernel_dispatches: dict[int, registry_mod.KernelDispatch] = \
         dataclasses.field(default_factory=dict)
+    autotune_decisions: dict[int, autotune_mod.Decision] = \
+        dataclasses.field(default_factory=dict)
 
     def __call__(self, x: jnp.ndarray,
                  params: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
@@ -263,7 +345,8 @@ class OptimizedNet:
         """Per-stack coverage + planned HBM traffic of this rewrite."""
         return coverage_report(self.segments, self.plans, self.shapes,
                                self.config.itemsize,
-                               kernel_dispatch=self.kernel_dispatches)
+                               kernel_dispatch=self.kernel_dispatches,
+                               autotune=self.autotune_decisions)
 
     def explain(self) -> str:
         """Human-readable :meth:`report` (ops captured vs. left opaque,
@@ -272,35 +355,57 @@ class OptimizedNet:
 
 
 def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
-                   config: OptimizeConfig
+                   config: OptimizeConfig, *,
+                   param_shapes: Mapping[str, tuple[int, ...]] | None = None,
+                   tuner: "autotune_mod.Autotuner | None" = None
                    ) -> tuple[dict[int, codegen.Executor],
                               dict[int, collapse.CollapsePlan],
-                              dict[int, registry_mod.KernelDispatch]]:
+                              dict[int, registry_mod.KernelDispatch],
+                              dict[int, autotune_mod.Decision]]:
     """Collapse + compile every stack segment, and compile every registry
     KERNEL segment, against ``config`` (shared by :func:`optimize_graph`
     and the traced ``repro.api.optimize`` facade — one place threads
-    OptimizeConfig into the collapser/codegen).  Returns (executors,
-    plans, kernel dispatch records)."""
+    OptimizeConfig into the collapser/codegen).  With ``config.autotune``
+    each segment's variant is measured and hard-floored at its baseline
+    (:mod:`repro.core.autotune`).  Returns (executors, plans, kernel
+    dispatch records, autotune decisions)."""
+    if tuner is None and config.autotune:
+        tuner = autotune_mod.Autotuner.from_config(config)
     executors: dict[int, codegen.Executor] = {}
     plans: dict[int, collapse.CollapsePlan] = {}
     dispatches: dict[int, registry_mod.KernelDispatch] = {}
+    decisions: dict[int, autotune_mod.Decision] = {}
     for idx, seg in enumerate(segments):
         if seg.is_stack:
             in_shapes = {v: tuple(shapes[v]) for v in seg.stack.inputs}
-            plan = collapse.collapse(
-                seg.stack, in_shapes, config.device,
-                itemsize=config.itemsize,
-                max_steps_per_sequence=config.max_steps_per_sequence,
-                differentiable=config.differentiable)
+            mode = config.mode
+            if tuner is not None and config.mode != "barrier":
+                # barrier IS the floor: nothing to measure against
+                decision, mode, plan = autotune_mod.tune_stack(
+                    tuner, seg.stack, in_shapes, config,
+                    param_shapes=param_shapes)
+                decisions[idx] = decision
+            else:
+                plan = collapse.collapse(
+                    seg.stack, in_shapes, config.device,
+                    itemsize=config.itemsize,
+                    max_steps_per_sequence=config.max_steps_per_sequence,
+                    differentiable=config.differentiable)
             plans[idx] = plan
             executors[idx] = codegen.compile_plan(
-                plan, mode=config.mode, interpret=config.interpret,
+                plan, mode=mode, interpret=config.interpret,
                 cache_size=config.code_cache_size)
         elif seg.op.kind == ir.OpKind.KERNEL:
+            backend = reason = None
+            if tuner is not None:
+                tuned = autotune_mod.tune_kernel(tuner, seg.op, config)
+                if tuned is not None:
+                    decisions[idx], backend, reason = tuned
             executors[idx], dispatches[idx] = codegen.compile_kernel_op(
                 seg.op, mode=config.mode, interpret=config.interpret,
-                cache_size=config.code_cache_size)
-    return executors, plans, dispatches
+                cache_size=config.code_cache_size, backend=backend,
+                reason=reason)
+    return executors, plans, dispatches, decisions
 
 
 def optimize_graph(graph: ir.NetGraph,
@@ -316,10 +421,12 @@ def optimize_graph(graph: ir.NetGraph,
             shapes.update(ir.infer_shapes(seg.stack, in_shapes))
         else:
             _infer_opaque_shape(seg.op, shapes)
-    executors, plans, dispatches = compile_stacks(segments, shapes, config)
+    executors, plans, dispatches, tuned = compile_stacks(segments, shapes,
+                                                         config)
     return OptimizedNet(graph=graph, segments=segments, executors=executors,
                         plans=plans, config=config, shapes=shapes,
-                        kernel_dispatches=dispatches)
+                        kernel_dispatches=dispatches,
+                        autotune_decisions=tuned)
 
 
 def optimize_stack(program: ir.StackProgram,

@@ -143,51 +143,69 @@ def compile_plan(plan: collapse_mod.CollapsePlan, *, mode: str = "xla",
 _KERNEL_PLUMBING_ATTRS = frozenset({"slots", "kernel"})
 
 
+def kernel_inner(op: ir.OpNode, *, backend: registry_mod.KernelType,
+                 interpret: bool = True,
+                 cache_size: int | None = None) -> Callable:
+    """The positional compiled closure for one KERNEL op on an explicit
+    backend.  Cached on kernel id + backend + static attrs only, so
+    identically-shaped kernel sites across traced graphs share one entry;
+    the autotuner calls this directly to measure PALLAS against REF on
+    the same operands before committing a dispatch."""
+    if cache_size is not None:
+        _raise_cache_limit_to(cache_size)
+    entry = registry_mod.get(op.attrs["kernel"])
+    static = {k: v for k, v in op.attrs.items()
+              if k not in _KERNEL_PLUMBING_ATTRS}
+    key = ("kernel", entry.name, backend.value, interpret,
+           ir._freeze(static))
+    inner = _cache_get(key)
+    if inner is not None:
+        return inner
+    stat_key = f"{entry.name}_{backend.value}"
+    out_shape = tuple(op.attrs["out_shape"])
+    out_dtype = op.attrs["out_dtype"]
+
+    if backend is registry_mod.KernelType.PALLAS:
+        call = lambda *arrays: entry.pallas(list(arrays), static,  # noqa: E731
+                                            interpret)
+        if entry.vjp == "ref":
+            # entry declares no custom rule on its pallas path:
+            # wrap it so jax.grad recomputes through the jnp twin
+            call = autodiff.with_ref_vjp(
+                call, lambda *arrays: entry.ref(list(arrays), static))
+    else:
+        # the jnp twin differentiates natively under jax.vjp
+        call = lambda *arrays: entry.ref(list(arrays), static)  # noqa: E731
+
+    def inner(*arrays):
+        registry_mod.STATS.record(stat_key)
+        return jnp.reshape(call(*arrays), out_shape).astype(out_dtype)
+
+    _cache_put(key, inner)
+    return inner
+
+
 def compile_kernel_op(op: ir.OpNode, *, mode: str = "xla",
                       interpret: bool = True,
-                      cache_size: int | None = None
+                      cache_size: int | None = None,
+                      backend: registry_mod.KernelType | None = None,
+                      reason: str | None = None
                       ) -> tuple[Executor, registry_mod.KernelDispatch]:
     """Compile one registry KERNEL op; returns (executor, dispatch record).
 
     The backend decision (pallas kernel vs ref twin) is made here, once,
     from the traced operand shapes — and returned so ``report()`` can
-    surface a constraint-driven fallback instead of hiding it.  The inner
-    compiled closure is positional and cached on kernel id + shapes +
-    static attrs only, so identically-shaped kernel sites across traced
-    graphs share one entry.
+    surface a constraint-driven fallback instead of hiding it.  An
+    explicit ``backend`` (with its ``reason``) overrides the static
+    planner — the autotuner's measured dispatch arrives through it.
     """
-    if cache_size is not None:
-        _raise_cache_limit_to(cache_size)
-    entry = registry_mod.get(op.attrs["kernel"])
-    dispatch = registry_mod.plan_dispatch(op, mode)
-    static = {k: v for k, v in op.attrs.items()
-              if k not in _KERNEL_PLUMBING_ATTRS}
-    key = ("kernel", entry.name, dispatch.backend.value, interpret,
-           ir._freeze(static))
-    inner = _cache_get(key)
-    if inner is None:
-        backend = dispatch.backend
-        stat_key = f"{entry.name}_{backend.value}"
-        out_shape = tuple(op.attrs["out_shape"])
-        out_dtype = op.attrs["out_dtype"]
-
-        if backend is registry_mod.KernelType.PALLAS:
-            call = lambda *arrays: entry.pallas(list(arrays), static,  # noqa: E731
-                                                interpret)
-            if entry.vjp == "ref":
-                # entry declares no custom rule on its pallas path:
-                # wrap it so jax.grad recomputes through the jnp twin
-                call = autodiff.with_ref_vjp(
-                    call, lambda *arrays: entry.ref(list(arrays), static))
-        else:
-            # the jnp twin differentiates natively under jax.vjp
-            call = lambda *arrays: entry.ref(list(arrays), static)  # noqa: E731
-
-        def inner(*arrays):
-            registry_mod.STATS.record(stat_key)
-            return jnp.reshape(call(*arrays), out_shape).astype(out_dtype)
-
-        _cache_put(key, inner)
+    if backend is None:
+        dispatch = registry_mod.plan_dispatch(op, mode)
+    else:
+        dispatch = registry_mod.KernelDispatch(op.attrs["kernel"], backend,
+                                               reason)
+    inner = kernel_inner(op, backend=dispatch.backend, interpret=interpret,
+                         cache_size=cache_size)
 
     slots = op.attrs["slots"]
     out_name = op.output

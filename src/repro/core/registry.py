@@ -483,18 +483,21 @@ def _kernel_op(ctx: _Ctx, kernel: str, root: int, claimed: set[int],
                slots: tuple, extra_attrs: dict) -> KernelMatch | None:
     root_op = ctx.ops[root]
     arg_shapes = []
+    arg_dtypes = []
     for slot in slots:
         aval = ctx.slot_aval(slot)
         if aval is None:
             return None
         arg_shapes.append(aval[0])
+        arg_dtypes.append(str(np.dtype(aval[1])))
     out_shape, out_dtype = ctx.value_aval(root_op.output)
     op = ir.OpNode(
         ir.OpKind.KERNEL, f"{kernel}[{root_op.name}]",
         tuple(s[1] for s in slots if s[0] == "in"), root_op.output,
         params=tuple(s[1] for s in slots if s[0] == "p"),
         attrs={"kernel": kernel, "slots": tuple(slots),
-               "arg_shapes": tuple(arg_shapes), "out_shape": out_shape,
+               "arg_shapes": tuple(arg_shapes),
+               "arg_dtypes": tuple(arg_dtypes), "out_shape": out_shape,
                "out_dtype": out_dtype, **extra_attrs})
     return KernelMatch(kernel=kernel, root=root,
                        claimed=tuple(sorted(claimed)), op=op)

@@ -59,6 +59,10 @@ class ServeStats:
     # over every lane)
     admitted: int = 0
     completed: int = 0
+    failed: int = 0                 # requests completed with an error
+    # status ('invalid' / 'error') instead of aborting the whole run
+    timed_out: int = 0              # requests whose queue wait exceeded
+    # their deadline before a slot freed up
     wall_s: float = 0.0
 
     @property

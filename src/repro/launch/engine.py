@@ -60,18 +60,29 @@ STATS = DispatchStats(keys=(
 class Request:
     """One generation request.  ``request_id`` seeds the RNG lane (reuse an
     id and you reuse its sample stream); ``max_new_tokens`` is the stop
-    length; ``temperature <= 0`` is greedy."""
+    length; ``temperature <= 0`` is greedy.  ``deadline_ms`` bounds the
+    queue wait: a request still waiting for a slot past its deadline
+    completes with status ``'timeout'`` instead of holding its caller
+    forever behind a long queue."""
     request_id: int
     prompt: Sequence[int]
     max_new_tokens: int
     temperature: float = 0.0
+    deadline_ms: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
 class Completion:
+    """``status`` is ``'ok'`` for a served generation; a request that
+    failed validation (``'invalid'``), timed out in the queue
+    (``'timeout'``), or hit a per-request error (``'error'``) still gets
+    its Completion — one bad request never aborts the other slots'
+    work.  ``reason`` carries the failure detail for non-ok statuses."""
     request_id: int
     prompt_len: int
     tokens: np.ndarray          # (max_new_tokens,) int32
+    status: str = "ok"          # 'ok' | 'invalid' | 'timeout' | 'error'
+    reason: str | None = None
 
 
 @dataclasses.dataclass
@@ -212,8 +223,12 @@ class Engine:
         """Serve every request to completion; returns completions in
         submission order.  ``key`` overrides the per-run RNG key (default:
         ``fold_in(PRNGKey(seed), run_counter)`` so repeated runs with
-        temperature sampling draw fresh streams)."""
-        prompts = [self._validate(r) for r in requests]
+        temperature sampling draw fresh streams).
+
+        Error isolation is per request: a validation failure yields a
+        ``status='invalid'`` Completion for that request and the rest of
+        the queue is served normally — ``run()`` only raises for engine
+        misconfiguration, never for one bad request."""
         if key is None:
             key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
                                      self._n_runs)
@@ -225,10 +240,19 @@ class Engine:
         stats_before = STATS.snapshot()
 
         B, C = self.slots, self.prefill_chunk
-        queue: collections.deque = collections.deque(
-            (i, r, p) for i, (r, p) in enumerate(zip(requests, prompts)))
         completions: list[Completion | None] = [None] * len(requests)
         stats = ServeStats(n_requests=len(requests), n_slots=B)
+        queue: collections.deque = collections.deque()
+        for i, r in enumerate(requests):
+            try:
+                queue.append((i, r, self._validate(r)))
+            except ValueError as e:
+                completions[i] = Completion(
+                    request_id=r.request_id,
+                    prompt_len=int(np.size(np.asarray(r.prompt))),
+                    tokens=np.zeros(0, np.int32), status="invalid",
+                    reason=str(e))
+                stats.failed += 1
         slot: list[_Slot | None] = [None] * B
         dirty = [False] * B             # slot held a previous request
         # plain list, not an ndarray: the mask handed to the jitted reset
@@ -252,6 +276,18 @@ class Engine:
             for b in range(B):
                 while slot[b] is None and queue:
                     idx, req, prompt = queue.popleft()
+                    waited_ms = (time.perf_counter() - t0) * 1e3
+                    if req.deadline_ms is not None \
+                            and waited_ms > req.deadline_ms:
+                        completions[idx] = Completion(
+                            request_id=req.request_id,
+                            prompt_len=len(prompt),
+                            tokens=np.zeros(0, np.int32),
+                            status="timeout",
+                            reason=(f"queued {waited_ms:.1f}ms, past the "
+                                    f"{req.deadline_ms:.1f}ms deadline"))
+                        stats.timed_out += 1
+                        continue
                     stats.admitted += 1
                     if req.max_new_tokens == 0:
                         complete(idx, req, prompt, [])
@@ -259,7 +295,17 @@ class Engine:
                     gen: list[int] = []
                     last = 0
                     if len(prompt) == 0:
-                        tok0 = self._first_token_from_zero_logits(req, key)
+                        try:
+                            tok0 = self._first_token_from_zero_logits(
+                                req, key)
+                        except Exception as e:   # isolate the one request
+                            completions[idx] = Completion(
+                                request_id=req.request_id, prompt_len=0,
+                                tokens=np.zeros(0, np.int32),
+                                status="error",
+                                reason=f"{type(e).__name__}: {e}")
+                            stats.failed += 1
+                            continue
                         gen = [tok0]
                         stats.generated_tokens += 1
                         if req.max_new_tokens == 1:

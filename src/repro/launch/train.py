@@ -159,10 +159,12 @@ def build_trainer(tc: TrainerConfig) -> Trainer:
     start_step = 0
     checkpointer = None
     if tc.ckpt_dir:
-        latest = ckpt.latest_step(tc.ckpt_dir)
-        if latest is not None:
-            tree, extra = ckpt.restore(tc.ckpt_dir, latest,
+        # robust resume: crash orphans are swept, a truncated latest
+        # checkpoint falls back to the previous complete one
+        restored = ckpt.restore_latest(tc.ckpt_dir,
                                        {"params": params, "opt": opt_state})
+        if restored is not None:
+            tree, extra, latest = restored
             params, opt_state = tree["params"], tree["opt"]
             start_step = int(extra.get("next_step", latest))
             print(f"[train] resumed from step {latest} "

@@ -1,0 +1,247 @@
+"""Fault-tolerance tier-1 coverage: elastic mesh re-planning, the
+failure-injection / checkpoint-resume round trip through the training
+driver, straggler detection, and the hardened checkpoint loader
+(truncated leaves, crash orphans, fallback to the previous complete
+checkpoint)."""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.distributed import fault_tolerance as ft
+from repro.launch.train import TrainerConfig, train
+
+
+# ---------------------------------------------------------------------------
+# plan_mesh: survivor counts after host loss
+# ---------------------------------------------------------------------------
+
+class TestPlanMesh:
+    def test_keeps_requested_tp_when_divisible(self):
+        plan = ft.plan_mesh(256, model_parallel=16)
+        assert plan.shape == (16, 16)
+        assert plan.axis_names == ("data", "model")
+        assert plan.n_devices == 256
+
+    def test_halves_tp_to_maximize_utilization(self):
+        """24 survivors: TP=16 would use only 16 chips; halving to TP=8
+        uses all 24 — utilization wins, ties break toward higher TP."""
+        plan = ft.plan_mesh(24, model_parallel=16)
+        assert plan.shape == (3, 8)
+        assert plan.n_devices == 24
+
+    def test_ragged_survivors_leave_remainder_idle(self):
+        """17 survivors with TP floored at 4: every eligible TP uses 16
+        chips, the tie keeps the requested TP=16 and idles one chip."""
+        plan = ft.plan_mesh(17, model_parallel=16, min_model_parallel=4)
+        assert plan.shape == (1, 16)
+        assert plan.n_devices == 16
+
+    def test_survivors_force_tp_halving(self):
+        """8 survivors cannot host TP=16: halve until the grid fits."""
+        plan = ft.plan_mesh(8, model_parallel=16)
+        assert plan.shape == (1, 8)
+        assert plan.n_devices == 8
+
+    def test_halving_stops_at_min_model_parallel(self):
+        plan = ft.plan_mesh(6, model_parallel=16, min_model_parallel=2)
+        assert plan.shape == (3, 2)
+
+    def test_unmeshable_count_raises(self):
+        """min TP larger than the survivor pool: no valid grid exists."""
+        with pytest.raises(ValueError, match="cannot build a mesh"):
+            ft.plan_mesh(4, model_parallel=16, min_model_parallel=8)
+
+    def test_zero_devices_raises(self):
+        with pytest.raises(ValueError, match="cannot build a mesh"):
+            ft.plan_mesh(0, model_parallel=16)
+
+    def test_pods_add_leading_axis(self):
+        plan = ft.plan_mesh(32, model_parallel=4, pods=2)
+        assert plan.shape == (2, 4, 4)
+        assert plan.axis_names == ("pod", "data", "model")
+        assert plan.n_devices == 32
+
+
+# ---------------------------------------------------------------------------
+# failure injection + auto-resume round trip through launch/train.py
+# ---------------------------------------------------------------------------
+
+def _tc(ckpt_dir: str) -> TrainerConfig:
+    return TrainerConfig(arch="deepseek-7b", reduced=True, steps=6,
+                         ckpt_dir=ckpt_dir, ckpt_every=2, log_every=100,
+                         batch_override=2, seq_override=16, lr=3e-3)
+
+
+class TestResumeRoundTrip:
+    def test_injector_raises_once_then_disarms(self):
+        hook = ft.failure_injector({3})
+        hook(2)
+        with pytest.raises(ft.SimulatedFailure, match="step 3"):
+            hook(3)
+        hook(3)                 # disarmed after firing once
+
+    def test_kill_and_resume_matches_uninterrupted(self, tmp_path):
+        """Kill at step 5 (after the step-4 checkpoint), restart, and the
+        resumed run reproduces the uninterrupted final loss — the
+        examples/fault_tolerance.py flow as a tier-1 test."""
+        full = train(_tc(str(tmp_path / "a")))
+        assert [r["step"] for r in full] == list(range(6))
+
+        with pytest.raises(ft.SimulatedFailure):
+            train(_tc(str(tmp_path / "b")),
+                  failure_hook=ft.failure_injector({5}))
+        resumed = train(_tc(str(tmp_path / "b")))
+        assert resumed[0]["step"] == 5           # took up after step-4 ckpt
+        np.testing.assert_allclose(resumed[-1]["loss"], full[-1]["loss"],
+                                   rtol=1e-6)
+
+    def test_resume_survives_truncated_latest_checkpoint(self, tmp_path):
+        """Corrupting the newest checkpoint after the crash must not brick
+        the resume: the loader falls back to the previous complete one."""
+        d = str(tmp_path / "c")
+        with pytest.raises(ft.SimulatedFailure):
+            train(_tc(d), failure_hook=ft.failure_injector({5}))
+        steps = ckpt.available_steps(d)
+        assert steps == [2, 4]
+        latest = os.path.join(d, f"step_{steps[-1]:08d}")
+        leaf = next(f for f in sorted(os.listdir(latest))
+                    if f.endswith(".npy"))
+        path = os.path.join(latest, leaf)
+        blob = open(path, "rb").read()
+        with open(path, "wb") as fh:            # mid-file truncation
+            fh.write(blob[: len(blob) // 2])
+        resumed = train(_tc(d))
+        assert resumed[0]["step"] == 3           # step-2 ckpt, not step-4
+        assert resumed[-1]["step"] == 5
+
+
+# ---------------------------------------------------------------------------
+# StragglerWatchdog EWMA flagging
+# ---------------------------------------------------------------------------
+
+class TestStragglerWatchdog:
+    def _drive(self, wd, durations, clock):
+        flags = []
+        for dt in durations:
+            wd.start()
+            clock[0] += dt
+            flags.append(wd.stop())
+        return flags
+
+    def test_flags_slow_step_after_warmup(self, monkeypatch):
+        clock = [100.0]
+        monkeypatch.setattr(ft.time, "monotonic", lambda: clock[0])
+        wd = ft.StragglerWatchdog(alpha=0.1, threshold=2.0,
+                                  warmup_steps=3)
+        flags = self._drive(wd, [1.0, 1.0, 1.0, 1.0, 5.0, 1.0], clock)
+        assert flags == [False, False, False, False, True, False]
+        assert wd.slow_steps == 1
+
+    def test_slow_step_does_not_poison_baseline(self, monkeypatch):
+        """A flagged step is excluded from the EWMA: the baseline stays
+        ~1.0 so a following normal step is not compared against a
+        straggler-inflated average."""
+        clock = [0.0]
+        monkeypatch.setattr(ft.time, "monotonic", lambda: clock[0])
+        wd = ft.StragglerWatchdog(alpha=0.5, threshold=2.0,
+                                  warmup_steps=2)
+        self._drive(wd, [1.0, 1.0, 10.0], clock)
+        assert wd._ewma == pytest.approx(1.0)
+        flags = self._drive(wd, [1.9], clock)
+        assert flags == [False]
+
+    def test_warmup_never_flags(self, monkeypatch):
+        clock = [0.0]
+        monkeypatch.setattr(ft.time, "monotonic", lambda: clock[0])
+        wd = ft.StragglerWatchdog(warmup_steps=5)
+        flags = self._drive(wd, [1.0, 50.0, 1.0, 50.0, 1.0], clock)
+        assert flags == [False] * 5
+
+
+# ---------------------------------------------------------------------------
+# hardened checkpoint loader
+# ---------------------------------------------------------------------------
+
+def _tree(seed: int):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((4, 3)).astype(np.float32),
+            "b": np.arange(3, dtype=np.float32) * seed}
+
+
+class TestCheckpointHardening:
+    def test_truncated_npy_raises_checkpoint_error(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, _tree(1))
+        path = os.path.join(d, "step_00000001", "w.npy")
+        blob = open(path, "rb").read()
+        with open(path, "wb") as fh:
+            fh.write(blob[: len(blob) // 2])
+        with pytest.raises(ckpt.CheckpointError, match="truncated|w"):
+            ckpt.restore(d, 1, _tree(0))
+
+    def test_restore_latest_falls_back_past_corruption(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, _tree(1), extra={"next_step": 2})
+        ckpt.save(d, 2, _tree(2), extra={"next_step": 3})
+        path = os.path.join(d, "step_00000002", "w.npy")
+        with open(path, "wb") as fh:
+            fh.write(b"\x93NUMPY garbage")
+        tree, extra, step = ckpt.restore_latest(d, _tree(0))
+        assert step == 1
+        assert extra == {"next_step": 2}
+        np.testing.assert_array_equal(tree["w"], _tree(1)["w"])
+
+    def test_restore_latest_none_when_nothing_valid(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, _tree(1))
+        shutil.rmtree(os.path.join(d, "step_00000001"))
+        assert ckpt.restore_latest(d, _tree(0)) is None
+        assert ckpt.restore_latest(str(tmp_path / "missing"),
+                                   _tree(0)) is None
+
+    def test_incomplete_manifest_rejected(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, _tree(1))
+        ckpt.save(d, 2, _tree(2))
+        mpath = os.path.join(d, "step_00000002", "manifest.json")
+        manifest = json.load(open(mpath))
+        manifest["complete"] = False
+        json.dump(manifest, open(mpath, "w"))
+        with pytest.raises(ckpt.CheckpointError, match="incomplete"):
+            ckpt.restore(d, 2, _tree(0))
+        _, _, step = ckpt.restore_latest(d, _tree(0))
+        assert step == 1
+
+    def test_manifest_dtype_mismatch_rejected(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, _tree(1))
+        path = os.path.join(d, "step_00000001", "b.npy")
+        np.save(path, np.arange(3, dtype=np.int64))
+        with pytest.raises(ckpt.CheckpointError, match="manifest"):
+            ckpt.restore(d, 1, _tree(0))
+
+    def test_orphaned_tmp_dirs_cleaned_and_skipped(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, _tree(1))
+        orphan = os.path.join(d, "step_00000002.tmp")
+        os.makedirs(orphan)
+        with open(os.path.join(orphan, "w.npy"), "wb") as fh:
+            fh.write(b"partial write")
+        assert ckpt.latest_step(d) == 1          # tmp is never "latest"
+        _, _, step = ckpt.restore_latest(d, _tree(0))
+        assert step == 1
+        assert not os.path.exists(orphan)        # swept by the resume path
+
+    def test_restore_shape_mismatch_with_like(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, _tree(1))
+        bad_like = {"w": np.zeros((2, 2), np.float32),
+                    "b": np.zeros(3, np.float32)}
+        with pytest.raises(ckpt.CheckpointError, match="shape mismatch"):
+            ckpt.restore(d, 1, bad_like)

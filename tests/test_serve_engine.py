@@ -183,12 +183,68 @@ class TestEngine:
         assert o1[0].tokens.tolist() == o2[1].tokens.tolist()
         assert o1[1].tokens.tolist() == o2[0].tokens.tolist()
 
-    def test_admission_validates_max_len(self, dense_server):
+    def test_invalid_request_fails_alone(self, dense_server):
+        """A request that fails validation (here: 20 tokens > max_len 16)
+        gets a status='invalid' Completion with the reason; it used to
+        raise out of run() and abort every other slot's work."""
         engine = dense_server.engine(slots=2)
-        with pytest.raises(ValueError, match="max_len"):
-            engine.run([Request(request_id=0,
-                                prompt=np.zeros(10, np.int32),
-                                max_new_tokens=10)])       # 20 > 16
+        comps = engine.run([Request(request_id=0,
+                                    prompt=np.zeros(10, np.int32),
+                                    max_new_tokens=10)])    # 20 > 16
+        assert comps[0].status == "invalid"
+        assert "max_len" in comps[0].reason
+        assert comps[0].tokens.shape == (0,)
+        assert engine.last_stats.failed == 1
+        assert engine.last_stats.admitted == 0
+
+    def test_bad_request_does_not_abort_neighbors(self, dense_server,
+                                                  dense_prompts):
+        """Error isolation: a queue mixing invalid and valid requests
+        serves the valid ones exactly as if the bad one were absent."""
+        good = [Request(request_id=i, prompt=dense_prompts[i],
+                        max_new_tokens=3) for i in range(3)]
+        bad = Request(request_id=99, prompt=np.zeros((2, 3), np.int32),
+                      max_new_tokens=2)           # 2-D prompt: invalid
+        engine = dense_server.engine(slots=2)
+        mixed = engine.run([good[0], bad, good[1], good[2]])
+        assert mixed[1].status == "invalid"
+        assert "1-D" in mixed[1].reason
+        assert engine.last_stats.completed == 3
+        assert engine.last_stats.failed == 1
+        clean = dense_server.engine(slots=2).run(good)
+        for got, want in zip((mixed[0], mixed[2], mixed[3]), clean):
+            assert got.status == "ok"
+            assert got.tokens.tolist() == want.tokens.tolist()
+
+    def test_deadline_times_out_queued_request(self, dense_server,
+                                               dense_prompts,
+                                               monkeypatch):
+        """A request whose queue wait exceeds its deadline completes with
+        status='timeout' instead of waiting for a slot forever; requests
+        without a deadline (or admitted in time) are unaffected."""
+        reqs = [Request(request_id=0, prompt=dense_prompts[0],
+                        max_new_tokens=4),
+                Request(request_id=1, prompt=dense_prompts[1],
+                        max_new_tokens=2, deadline_ms=0.0)]
+        engine = dense_server.engine(slots=1)     # one slot: r1 must wait
+        comps = engine.run(reqs)
+        assert comps[0].status == "ok"
+        assert comps[0].tokens.shape == (4,)
+        assert comps[1].status == "timeout"
+        assert "deadline" in comps[1].reason
+        assert engine.last_stats.timed_out == 1
+        assert engine.last_stats.completed == 1
+
+    def test_deadline_met_serves_normally(self, dense_server,
+                                          dense_prompts):
+        reqs = [Request(request_id=i, prompt=dense_prompts[i],
+                        max_new_tokens=3, deadline_ms=1e9)
+                for i in range(2)]
+        engine = dense_server.engine(slots=2)
+        comps = engine.run(reqs)
+        assert all(c.status == "ok" for c in comps)
+        assert engine.last_stats.timed_out == 0
+        assert engine.last_stats.completed == 2
 
     def test_zero_new_tokens_dispatches_nothing(self, dense_server):
         engine = dense_server.engine(slots=2)
