@@ -38,6 +38,7 @@ from repro.core import api as core_api
 from repro.core import autotune as autotune_mod
 from repro.core import registry as registry_mod
 from repro.core import trace as trace_mod
+from repro.core import verify as verify_mod
 
 # Canonical re-exports: the config and report types live with the core
 # implementation; this module is the supported way to reach them.
@@ -89,6 +90,12 @@ class OptimizedFn:
     #: slower than the raw function: __call__ delegates to the raw
     #: callable (still validated) — never-slower, end to end.
     passthrough: Callable | None = None
+    #: Static-verifier findings recorded at compile time
+    #: (:mod:`repro.core.verify`).  Under ``verify='warn'`` error findings
+    #: are waived but kept here and re-emitted by :meth:`report`, so a
+    #: long-lived serving process can read back what was waived long
+    #: after the compile-time warning scrolled away.
+    verify_findings: tuple = ()
 
     def __call__(self, *args):
         tr = self.trace_result
@@ -149,7 +156,8 @@ class OptimizedFn:
         return core_api.coverage_report(self.segments, self.plans,
                                         self.shapes, self.config.itemsize,
                                         kernel_dispatch=self.kernel_dispatches,
-                                        autotune=self.autotune_decisions)
+                                        autotune=self.autotune_decisions,
+                                        verify=self.verify_findings)
 
     def explain(self) -> str:
         """Human-readable :meth:`report`."""
@@ -177,18 +185,27 @@ def optimize(fn: Callable, *example_args: Any,
     # mid-stack with no in-graph consumer (stack executors only
     # materialize their declared outputs)
     keep = frozenset(ref for kind, ref in tr.out_refs if kind == "env")
+    # graph-level static verification (SSA / dead values / recorded-aval
+    # consistency) before segmentation; plan/kernel-level checks run
+    # inside compile_stacks, between the collapse and codegen stages
+    graph_findings: tuple = ()
+    if config.verify != "off":
+        graph_findings = tuple(verify_mod.verify_trace(tr))
+        verify_mod.enforce(graph_findings, config.verify,
+                           subject=tr.graph.name)
     segments = analyzer.analyze(tr.graph, layout="auto", keep=keep)
     tuner = (autotune_mod.Autotuner.from_config(config)
              if config.autotune else None)
-    executors, plans, dispatches, tuned = core_api.compile_stacks(
+    executors, plans, dispatches, tuned, findings = core_api.compile_stacks(
         segments, tr.shapes, config, param_shapes=tr.param_shapes,
-        tuner=tuner)
+        dtypes=tr.dtypes, tuner=tuner)
     net = OptimizedFn(trace_result=tr, segments=segments,
                       executors=executors, plans=plans, config=config,
                       shapes=dict(tr.shapes),
                       param_shapes=dict(tr.param_shapes),
                       kernel_dispatches=dispatches,
-                      kernel_matches=matches, autotune_decisions=tuned)
+                      kernel_matches=matches, autotune_decisions=tuned,
+                      verify_findings=graph_findings + findings)
     if tuner is not None:
         _floor_whole_function(tuner, net, fn, example_args, config)
     return net

@@ -9,7 +9,6 @@ optimized and are left untouched", Fig. 9).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
 
 from repro.core import ir
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core import analyzer, codegen, collapse, ir, resource
 from repro.core import autotune as autotune_mod
 from repro.core import registry as registry_mod
+from repro.core import verify as verify_mod
 
 #: Execution modes an OptimizeConfig accepts (validated eagerly — a typo
 #: used to surface only deep inside codegen, as an opaque dispatch error).
@@ -69,11 +70,22 @@ class OptimizeConfig:
     # recorded reason instead of stalling compile time.  The baseline is
     # exempt — the floor must always exist.
     autotune_timeout_ms: float | None = 2000.0
+    # Static plan verification (repro.core.verify): re-derive every
+    # compile artifact's invariants between the collapse and codegen
+    # stages.  'strict' raises VerifyError on any violation before
+    # anything compiles; 'warn' (default) records findings on the
+    # optimized net + emits one UserWarning; 'off' skips the pass
+    # entirely (zero compile-time cost).
+    verify: str = "warn"
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
             raise ValueError(
                 f"unknown mode {self.mode!r}; allowed modes: {MODES}")
+        if self.verify not in verify_mod.VERIFY_MODES:
+            raise ValueError(
+                f"unknown verify mode {self.verify!r}; allowed: "
+                f"{verify_mod.VERIFY_MODES}")
         if not isinstance(self.itemsize, int) or self.itemsize <= 0:
             raise ValueError(
                 f"itemsize must be a positive int, got {self.itemsize!r}")
@@ -166,6 +178,20 @@ class CoverageReport:
     n_kernel: int = 0           # registry-dispatched KERNEL ops
     kernels: tuple[KernelCoverage, ...] = ()
     autotune: tuple[AutotuneCoverage, ...] = ()
+    #: Static-verifier findings recorded at compile time
+    #: (repro.core.verify.Finding records) — under verify='warn' these are
+    #: the violations that were waived; a long-lived serving process reads
+    #: them back here long after the compile-time warning scrolled away.
+    verify: tuple = ()
+
+    @property
+    def verify_errors(self) -> int:
+        """Error-severity findings the verify='warn' run waived."""
+        return sum(1 for f in self.verify if f.severity == "error")
+
+    @property
+    def verify_warnings(self) -> int:
+        return sum(1 for f in self.verify if f.severity != "error")
 
     @property
     def guardrail_trips(self) -> int:
@@ -227,6 +253,9 @@ class CoverageReport:
                 lines.append(f"    note: {ev}")
             for variant, why in a.failures:
                 lines.append(f"    candidate {variant} failed: {why}")
+        for f in self.verify:
+            lines.append(f"  verify [{f.severity}] {f.invariant} "
+                         f"@ {f.subject}: {f.detail}")
         return "\n".join(lines)
 
 
@@ -236,12 +265,14 @@ def coverage_report(segments, plans: Mapping[int, collapse.CollapsePlan],
                     kernel_dispatch: Mapping[
                         int, registry_mod.KernelDispatch] | None = None,
                     autotune: Mapping[
-                        int, autotune_mod.Decision] | None = None
+                        int, autotune_mod.Decision] | None = None,
+                    verify: tuple = ()
                     ) -> CoverageReport:
     """Build the per-stack coverage + planned-HBM-traffic report for a
     rewritten network (shared by :class:`OptimizedNet` and the traced-path
     ``repro.api.OptimizedFn``).  ``autotune`` maps segment index (or -1
-    for the function-level floor) to its committed decision."""
+    for the function-level floor) to its committed decision; ``verify``
+    carries the static verifier's compile-time findings."""
     kernel_dispatch = kernel_dispatch or {}
     tuned = tuple(
         AutotuneCoverage(
@@ -288,7 +319,8 @@ def coverage_report(segments, plans: Mapping[int, collapse.CollapsePlan],
         n_backbone=n_backbone, n_stacks=len(stacks),
         capture_ratio=n_captured / eligible if eligible else 1.0,
         stacks=tuple(stacks), n_synthetic=n_synthetic,
-        n_kernel=len(kernels), kernels=tuple(kernels), autotune=tuned)
+        n_kernel=len(kernels), kernels=tuple(kernels), autotune=tuned,
+        verify=tuple(verify))
 
 
 def run_segments(segments, executors: Mapping[int, codegen.Executor],
@@ -326,6 +358,9 @@ class OptimizedNet:
         dataclasses.field(default_factory=dict)
     autotune_decisions: dict[int, autotune_mod.Decision] = \
         dataclasses.field(default_factory=dict)
+    #: Static-verifier findings recorded at compile time (verify='warn'
+    #: waives error findings but keeps them readable here / in report()).
+    verify_findings: tuple = ()
 
     def __call__(self, x: jnp.ndarray,
                  params: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
@@ -346,7 +381,8 @@ class OptimizedNet:
         return coverage_report(self.segments, self.plans, self.shapes,
                                self.config.itemsize,
                                kernel_dispatch=self.kernel_dispatches,
-                               autotune=self.autotune_decisions)
+                               autotune=self.autotune_decisions,
+                               verify=self.verify_findings)
 
     def explain(self) -> str:
         """Human-readable :meth:`report` (ops captured vs. left opaque,
@@ -357,43 +393,70 @@ class OptimizedNet:
 def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
                    config: OptimizeConfig, *,
                    param_shapes: Mapping[str, tuple[int, ...]] | None = None,
+                   dtypes: Mapping[str, object] | None = None,
                    tuner: "autotune_mod.Autotuner | None" = None
                    ) -> tuple[dict[int, codegen.Executor],
                               dict[int, collapse.CollapsePlan],
                               dict[int, registry_mod.KernelDispatch],
-                              dict[int, autotune_mod.Decision]]:
+                              dict[int, autotune_mod.Decision],
+                              tuple]:
     """Collapse + compile every stack segment, and compile every registry
     KERNEL segment, against ``config`` (shared by :func:`optimize_graph`
     and the traced ``repro.api.optimize`` facade — one place threads
     OptimizeConfig into the collapser/codegen).  With ``config.autotune``
     each segment's variant is measured and hard-floored at its baseline
-    (:mod:`repro.core.autotune`).  Returns (executors, plans, kernel
-    dispatch records, autotune decisions)."""
+    (:mod:`repro.core.autotune`).
+
+    This runs in two stages with the static verifier between them: every
+    stack is *planned* first, then — unless ``config.verify == 'off'`` —
+    :func:`repro.core.verify.verify_segments` re-derives each plan's
+    invariants; under ``verify='strict'`` a violation raises
+    :class:`~repro.core.verify.VerifyError` before anything compiles.
+    Returns (executors, plans, kernel dispatch records, autotune
+    decisions, verify findings)."""
     if tuner is None and config.autotune:
         tuner = autotune_mod.Autotuner.from_config(config)
     executors: dict[int, codegen.Executor] = {}
     plans: dict[int, collapse.CollapsePlan] = {}
+    modes: dict[int, str] = {}
     dispatches: dict[int, registry_mod.KernelDispatch] = {}
     decisions: dict[int, autotune_mod.Decision] = {}
+
+    # Stage 1: plan every stack (collapse, or measure-then-commit).
+    for idx, seg in enumerate(segments):
+        if not seg.is_stack:
+            continue
+        in_shapes = {v: tuple(shapes[v]) for v in seg.stack.inputs}
+        mode = config.mode
+        if tuner is not None and config.mode != "barrier":
+            # barrier IS the floor: nothing to measure against
+            decision, mode, plan = autotune_mod.tune_stack(
+                tuner, seg.stack, in_shapes, config,
+                param_shapes=param_shapes)
+            decisions[idx] = decision
+        else:
+            plan = collapse.collapse(
+                seg.stack, in_shapes, config.device,
+                itemsize=config.itemsize,
+                max_steps_per_sequence=config.max_steps_per_sequence,
+                differentiable=config.differentiable)
+        plans[idx] = plan
+        modes[idx] = mode
+
+    # Stage 2: the static verifier gate, between planning and codegen.
+    findings: tuple = ()
+    if config.verify != "off":
+        findings = tuple(verify_mod.verify_segments(
+            segments, plans, shapes, config, dtypes=dtypes,
+            param_shapes=param_shapes))
+        verify_mod.enforce(findings, config.verify)
+
+    # Stage 3: codegen (only reached when verification passed or was
+    # waived).
     for idx, seg in enumerate(segments):
         if seg.is_stack:
-            in_shapes = {v: tuple(shapes[v]) for v in seg.stack.inputs}
-            mode = config.mode
-            if tuner is not None and config.mode != "barrier":
-                # barrier IS the floor: nothing to measure against
-                decision, mode, plan = autotune_mod.tune_stack(
-                    tuner, seg.stack, in_shapes, config,
-                    param_shapes=param_shapes)
-                decisions[idx] = decision
-            else:
-                plan = collapse.collapse(
-                    seg.stack, in_shapes, config.device,
-                    itemsize=config.itemsize,
-                    max_steps_per_sequence=config.max_steps_per_sequence,
-                    differentiable=config.differentiable)
-            plans[idx] = plan
             executors[idx] = codegen.compile_plan(
-                plan, mode=mode, interpret=config.interpret,
+                plans[idx], mode=modes[idx], interpret=config.interpret,
                 cache_size=config.code_cache_size)
         elif seg.op.kind == ir.OpKind.KERNEL:
             backend = reason = None
@@ -405,7 +468,7 @@ def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
                 seg.op, mode=config.mode, interpret=config.interpret,
                 cache_size=config.code_cache_size, backend=backend,
                 reason=reason)
-    return executors, plans, dispatches, decisions
+    return executors, plans, dispatches, decisions, findings
 
 
 def optimize_graph(graph: ir.NetGraph,
@@ -421,12 +484,19 @@ def optimize_graph(graph: ir.NetGraph,
             shapes.update(ir.infer_shapes(seg.stack, in_shapes))
         else:
             _infer_opaque_shape(seg.op, shapes)
-    executors, plans, dispatches, tuned = compile_stacks(segments, shapes,
-                                                         config)
+    graph_findings: tuple = ()
+    if config.verify != "off":
+        graph_findings = tuple(verify_mod.check_graph(
+            graph, shapes=shapes, keep=frozenset({graph.output})))
+        verify_mod.enforce(graph_findings, config.verify,
+                           subject=graph.name)
+    executors, plans, dispatches, tuned, findings = compile_stacks(
+        segments, shapes, config)
     return OptimizedNet(graph=graph, segments=segments, executors=executors,
                         plans=plans, config=config, shapes=shapes,
                         kernel_dispatches=dispatches,
-                        autotune_decisions=tuned)
+                        autotune_decisions=tuned,
+                        verify_findings=graph_findings + findings)
 
 
 def optimize_stack(program: ir.StackProgram,

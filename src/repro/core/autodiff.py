@@ -103,12 +103,19 @@ DIFFERENTIABLE_KINDS = frozenset({
     ir.OpKind.ROW_NORM, ir.OpKind.ROW_SOFTMAX, ir.OpKind.POOL2D,
 })
 
+#: Binary fns :func:`_binary_vjp` has a rule for.  Declared up front so the
+#: static verifier (repro.core.verify) can prove a differentiable plan has
+#: every VJP rule *before* runtime rather than hitting the
+#: NotImplementedError mid-backward.
+BINARY_VJP_FNS = frozenset({"add", "sub", "mul", "div", "max", "min"})
+
 
 def supports(program: ir.StackProgram) -> bool:
     """True when every op of ``program`` has a VJP rule here (i.e. the
     generated backward kernel can take the program end to end)."""
     return all(op.kind in DIFFERENTIABLE_KINDS and
-               (op.kind != ir.OpKind.EW_UNARY or op.fn in _UNARY_DERIVS)
+               (op.kind != ir.OpKind.EW_UNARY or op.fn in _UNARY_DERIVS) and
+               (op.kind != ir.OpKind.EW_BINARY or op.fn in BINARY_VJP_FNS)
                for op in program.ops)
 
 

@@ -40,6 +40,7 @@ from repro.core import autodiff
 from repro.core import collapse as collapse_mod
 from repro.core import ir
 from repro.core import registry as registry_mod
+from repro.core import verify as verify_mod
 from repro.kernels.fused_stack import ops as fused_ops
 
 Executor = Callable[[Mapping[str, jnp.ndarray], Mapping[str, jnp.ndarray]],
@@ -143,6 +144,15 @@ def compile_plan(plan: collapse_mod.CollapsePlan, *, mode: str = "xla",
 _KERNEL_PLUMBING_ATTRS = frozenset({"slots", "kernel"})
 
 
+def _unknown_kernel_error(op: ir.OpNode) -> verify_mod.VerifyError:
+    """A bare KeyError from deep inside codegen names nothing; raise the
+    verifier's structured error with op + invariant instead."""
+    return verify_mod.VerifyError([verify_mod.Finding(
+        "kernel.unknown", "error", op.name,
+        f"kernel id {op.attrs.get('kernel')!r} has no registry entry "
+        f"(known: {sorted(registry_mod.REGISTRY)})")])
+
+
 def kernel_inner(op: ir.OpNode, *, backend: registry_mod.KernelType,
                  interpret: bool = True,
                  cache_size: int | None = None) -> Callable:
@@ -153,7 +163,10 @@ def kernel_inner(op: ir.OpNode, *, backend: registry_mod.KernelType,
     the same operands before committing a dispatch."""
     if cache_size is not None:
         _raise_cache_limit_to(cache_size)
-    entry = registry_mod.get(op.attrs["kernel"])
+    try:
+        entry = registry_mod.get(op.attrs["kernel"])
+    except KeyError:
+        raise _unknown_kernel_error(op) from None
     static = {k: v for k, v in op.attrs.items()
               if k not in _KERNEL_PLUMBING_ATTRS}
     key = ("kernel", entry.name, backend.value, interpret,
@@ -200,7 +213,10 @@ def compile_kernel_op(op: ir.OpNode, *, mode: str = "xla",
     planner — the autotuner's measured dispatch arrives through it.
     """
     if backend is None:
-        dispatch = registry_mod.plan_dispatch(op, mode)
+        try:
+            dispatch = registry_mod.plan_dispatch(op, mode)
+        except KeyError:
+            raise _unknown_kernel_error(op) from None
     else:
         dispatch = registry_mod.KernelDispatch(op.attrs["kernel"], backend,
                                                reason)

@@ -53,6 +53,11 @@ class CollapsePlan:
     # same-signature plans whose collapse chose identical tiles but over
     # different image extents must not share one compiled executor.
     input_shapes: tuple = ()
+    # What the plan was sized *for* — recorded so the static verifier
+    # (repro.core.verify) can recompute the budget under the same
+    # assumptions the collapser used.
+    itemsize: int = 2
+    differentiable: bool = False
 
     def subprogram(self, i: int) -> ir.StackProgram:
         """Materialize sequence ``i`` as a standalone StackProgram (its
@@ -134,7 +139,8 @@ def collapse(program: ir.StackProgram,
     return CollapsePlan(
         program=program, sequences=tuple(seqs), device=device,
         input_shapes=tuple(sorted((k, tuple(v))
-                                  for k, v in input_shapes.items())))
+                                  for k, v in input_shapes.items())),
+        itemsize=itemsize, differentiable=differentiable)
 
 
 def _pack_rows(program: ir.StackProgram, steps: list[Step],

@@ -22,8 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import math
-from typing import Any, Callable, Mapping, Sequence
+from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp

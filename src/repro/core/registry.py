@@ -222,6 +222,20 @@ STATS = DispatchStats(keys=tuple(
     f"{name}_{bk.value}" for name in REGISTRY for bk in KernelType))
 
 
+def expected_out_shape(kernel: str, arg_shapes: tuple) -> tuple | None:
+    """Each kernel's output-aval contract, re-derived from its argument
+    avals — the static verifier's independent check on a KERNEL op's
+    recorded ``out_shape``.  ``None`` means the contract fixes only the
+    element count, not the exact shape (vocab_ce emits one loss per
+    gathered index; the traced gather decides the layout)."""
+    if kernel in ("rmsnorm", "swiglu") and arg_shapes:
+        return tuple(arg_shapes[0])
+    if kernel == "attention" and len(arg_shapes) == 3:
+        # softmax(q·kᵀ)·v: q's leading/sequence dims, v's head dim.
+        return tuple(arg_shapes[0][:-1]) + (arg_shapes[2][-1],)
+    return None
+
+
 def get(name: str) -> KernelEntry:
     return REGISTRY[name]
 

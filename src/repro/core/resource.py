@@ -18,7 +18,6 @@ in sublane multiples.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Mapping
 
 from repro.core import ir
@@ -242,6 +241,46 @@ def fits(steps: list[tuple[ir.OpNode, ...]], out_h: int, out_w: int,
     fps = sequence_footprint(steps, out_h, out_w, channels, itemsize, spec)
     need = sequence_bwd_bytes(fps) if differentiable else sequence_bytes(fps)
     return need <= spec.resource_limit
+
+
+def plan_vmem_bytes(plan, *, itemsize: int,
+                    differentiable: bool = False) -> list[int]:
+    """Recompute every sequence's VMEM working set from a finished collapse
+    plan — the static verifier's independent budget check (the collapser
+    sizes tiles *forward* from the budget; this walks the committed tile
+    geometry *back* to bytes, so a corrupted tile extent cannot hide).
+
+    ``plan`` is duck-typed (``program`` / ``sequences`` / ``device`` /
+    ``input_shapes`` / ``subprogram``) — this module must not import
+    :mod:`repro.core.collapse`, which imports it.  Returns one byte count
+    per sequence: the joint fwd+bwd working set when ``differentiable``.
+    """
+    program = plan.program
+    device = plan.device
+    in_shapes = {k: tuple(v) for k, v in plan.input_shapes}
+    needs: list[int] = []
+    if program.layout == "rows":
+        features = max((in_shapes[v][-1] if v in in_shapes else 0)
+                       for v in program.inputs)
+        for i, seq in enumerate(plan.sequences):
+            sub = plan.subprogram(i)
+            n_live = (max_live_values_bwd(sub) if differentiable
+                      else max_live_values(sub))
+            tile = seq.tile_rows or 256        # codegen's default geometry
+            needs.append(rows_tile_bytes(n_live, tile, features, itemsize,
+                                         device))
+    else:
+        shapes = ir.infer_shapes(program, in_shapes)
+        for i, seq in enumerate(plan.sequences):
+            sub = plan.subprogram(i)
+            _, oh, ow, c = shapes[sub.outputs[0]]
+            th = min(seq.tile_out_h or 8, oh)
+            tw = min(seq.tile_out_w or 8, ow)
+            fps = sequence_footprint([s.ops for s in seq.steps], th, tw, c,
+                                     itemsize, device)
+            needs.append(sequence_bwd_bytes(fps) if differentiable
+                         else sequence_bytes(fps))
+    return needs
 
 
 # ---------------------------------------------------------------------------

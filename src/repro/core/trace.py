@@ -1554,12 +1554,25 @@ def trace(fn: Callable, *example_args) -> TraceResult:
 
     out_name = next((ref for kind, ref in out_refs if kind == "env"), "arg0")
     name = getattr(fn, "__name__", None) or "traced"
+    # dead-value pruning: fn bodies that compute-and-discard (debug
+    # probes, tuple returns partially consumed, speculative matcher
+    # residue) leave ops whose outputs nothing consumes.  Iterate to a
+    # fixpoint — pruning one op can orphan its producers.
+    keep = {ref for kind, ref in out_refs if kind == "env"}
+    ops = list(builder.ops)
+    while True:
+        consumed = {v for op in ops for v in op.inputs}
+        live = [op for op in ops
+                if op.output in consumed or op.output in keep]
+        if len(live) == len(ops):
+            break
+        ops = live
     graph = ir.NetGraph(name=f"traced_{name}", input="arg0",
-                        output=out_name, ops=tuple(builder.ops))
+                        output=out_name, ops=tuple(ops))
     # drop const params no committed op references — matchers register
     # them speculatively (as_param inside an attempt that then fails), and
     # an orphan would ride the params dict of every optimized call
-    used = {p for op in builder.ops for p in op.params}
+    used = {p for op in ops for p in op.params}
     const_params = {k: v for k, v in builder.const_params.items()
                     if k in used}
     param_shapes = {k: v for k, v in builder.param_shapes.items()

@@ -1,0 +1,1081 @@
+"""Static plan verifier — proves every compile artifact sound *before* it runs.
+
+BrainSlug's promise is *transparency*: users hand over a plain JAX function
+and the pipeline silently substitutes fused depth-first kernels, registry
+rewrites, and autotuned variants.  The worst possible failure mode of such a
+system is a silent miscompile, so this module re-derives — independently of
+the code that produced them — the invariants every compile artifact must
+satisfy, and reports violations as structured :class:`Finding` records:
+
+1. **Graph / program well-formedness** (``graph.*`` / ``program.*``):
+   SSA def-before-use and single assignment, dead-value detection, and
+   symbolic shape/dtype inference over every :class:`~repro.core.ir.OpNode`
+   cross-checked against :func:`repro.core.ir.infer_shapes` *and* the traced
+   avals.  The local inference here is written from the op semantics, not by
+   calling the production inference — drift between the two is itself a
+   finding.
+2. **CollapsePlan legality** (``plan.*``): sequence splits must partition
+   the program with no gap/overlap/reorder; nhwc tile/halo arithmetic is
+   re-derived from first principles (receptive-field interval composition)
+   and must match the kernel planner's levels and exactly cover the output
+   extent; the joint fwd+bwd VMEM budget is recomputed through
+   :mod:`repro.core.resource` and must stay under the device limit.
+3. **pallas grid write-race detection** (``grid.*``): for each fused-stack
+   kernel the output BlockSpec index maps are evaluated symbolically over
+   the whole grid and every pair of grid points must write disjoint blocks.
+   Exactly two accumulation idioms are whitelisted: the sequential-grid
+   parameter-gradient sum (every grid point addresses *one* shared block,
+   race-free because the TPU grid is sequential) and the nhwc backward's
+   halo overlap-add (each grid point owns a private patch slot; the wrapper
+   combines the overlaps outside the kernel).
+4. **Registry rewrite soundness** (``kernel.*``): every ``OpKind.KERNEL``
+   op's recorded input/output avals must match the traced avals of the
+   OPAQUE cluster it consumed, the kernel id must resolve in the registry,
+   and every op of a ``differentiable=True`` plan must have an autodiff VJP
+   rule — turning a late ``KeyError``/``NotImplementedError`` deep inside
+   codegen into a named :class:`VerifyError` carrying the offending op,
+   source file, and invariant.
+
+The pass is wired behind ``OptimizeConfig.verify`` (``"off" | "warn" |
+"strict"``, default ``"warn"``) and runs between the collapse and codegen
+stages; ``python -m repro.lint`` drives it over the shipped configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+from repro.core import autodiff, ir, resource
+from repro.core import registry as registry_mod
+from repro.kernels.fused_stack import nhwc, nhwc_bwd, rows, rows_bwd
+
+#: Verification modes OptimizeConfig.verify accepts.
+VERIFY_MODES = ("off", "warn", "strict")
+
+#: Enumerated grid points per write spec before the check degrades to a
+#: truncated (warning-level) scan.  Every shipped plan is far below this.
+_GRID_ENUM_CAP = 65536
+
+#: invariant id -> (source module the artifact came from, description).
+#: The table ``README`` documents and ``VerifyError`` messages cite.
+INVARIANTS: dict[str, tuple[str, str]] = {
+    "graph.def-before-use": (
+        "src/repro/core/trace.py",
+        "every NetGraph op reads only values already defined"),
+    "graph.redefinition": (
+        "src/repro/core/trace.py",
+        "no NetGraph value is assigned twice (SSA single assignment)"),
+    "graph.output-undefined": (
+        "src/repro/core/trace.py",
+        "the NetGraph output names a defined value"),
+    "graph.dead-value": (
+        "src/repro/core/trace.py",
+        "no NetGraph op output is produced but never consumed"),
+    "graph.shape-mismatch": (
+        "src/repro/core/trace.py",
+        "recorded traced avals agree with re-derived op output shapes"),
+    "graph.dtype-mismatch": (
+        "src/repro/core/trace.py",
+        "recorded traced dtypes agree with re-derived op output dtypes"),
+    "program.def-before-use": (
+        "src/repro/core/ir.py",
+        "every StackProgram op reads only values already defined"),
+    "program.redefinition": (
+        "src/repro/core/ir.py",
+        "no StackProgram value is assigned twice (SSA single assignment)"),
+    "program.output-undefined": (
+        "src/repro/core/ir.py",
+        "every StackProgram output names a defined value"),
+    "program.dead-value": (
+        "src/repro/core/ir.py",
+        "no StackProgram op output is produced but never consumed"),
+    "program.unknown-fn": (
+        "src/repro/core/ir.py",
+        "every EW_UNARY/EW_BINARY/POOL2D fn exists in the semantics table"),
+    "program.shape-mismatch": (
+        "src/repro/core/ir.py",
+        "ir.infer_shapes and the recorded avals agree with the re-derived "
+        "symbolic shapes of every op"),
+    "program.dtype-mismatch": (
+        "src/repro/core/ir.py",
+        "recorded dtypes agree with re-derived op output dtypes"),
+    "plan.partition-gap": (
+        "src/repro/core/collapse.py",
+        "sequence splits cover every program op exactly once, in order"),
+    "plan.partition-overlap": (
+        "src/repro/core/collapse.py",
+        "no program op is assigned to more than one sequence"),
+    "plan.budget-exceeded": (
+        "src/repro/core/resource.py",
+        "the (joint fwd+bwd when differentiable) VMEM working set of every "
+        "sequence, recomputed from the resource model, stays under the "
+        "device budget"),
+    "plan.tile-coverage": (
+        "src/repro/core/collapse.py",
+        "output tiles exactly cover (with bounded padding) the output "
+        "extent — no dead tiles, no uncovered positions"),
+    "plan.halo-mismatch": (
+        "src/repro/kernels/fused_stack/nhwc.py",
+        "the kernel planner's per-level halo extents/origins equal the "
+        "receptive-field intervals re-derived from pool arithmetic"),
+    "plan.missing-vjp": (
+        "src/repro/core/autodiff.py",
+        "every op of a differentiable plan has an autodiff VJP rule"),
+    "grid.write-race": (
+        "src/repro/kernels/fused_stack/rows.py",
+        "distinct grid points write pairwise-disjoint output blocks"),
+    "grid.accumulator": (
+        "src/repro/kernels/fused_stack/rows_bwd.py",
+        "a grid-sum accumulator is addressed identically by every grid "
+        "point (the sequential-grid reduction idiom)"),
+    "grid.out-of-bounds": (
+        "src/repro/kernels/fused_stack/nhwc.py",
+        "every block index stays inside the output array"),
+    "kernel.unknown": (
+        "src/repro/core/registry.py",
+        "every KERNEL op's kernel id resolves to a registry entry"),
+    "kernel.slots-mismatch": (
+        "src/repro/core/registry.py",
+        "KERNEL slot bookkeeping is consistent with op inputs/params"),
+    "kernel.aval-mismatch": (
+        "src/repro/core/registry.py",
+        "recorded KERNEL arg/out avals equal the traced avals of the "
+        "consumed cluster"),
+    "kernel.no-vjp": (
+        "src/repro/core/registry.py",
+        "a KERNEL op in a differentiable net declares where its VJP "
+        "comes from"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One invariant check result.
+
+    ``invariant`` is a key of :data:`INVARIANTS`; ``severity`` is
+    ``"error"`` (soundness at stake — raises under ``verify="strict"``) or
+    ``"warning"`` (plan-health note, recorded but never raised); ``subject``
+    names the offending op/program/plan; ``source`` the module that
+    produced the artifact.
+    """
+
+    invariant: str
+    severity: str
+    subject: str
+    detail: str
+    source: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.source and self.invariant in INVARIANTS:
+            object.__setattr__(self, "source", INVARIANTS[self.invariant][0])
+
+    def __str__(self) -> str:
+        return (f"[{self.severity}] {self.invariant} @ {self.subject}: "
+                f"{self.detail} (source: {self.source or 'unknown'})")
+
+    def to_json(self) -> dict[str, str]:
+        return {"invariant": self.invariant, "severity": self.severity,
+                "subject": self.subject, "detail": self.detail,
+                "source": self.source}
+
+
+class VerifyError(Exception):
+    """Static verification failed under ``verify="strict"``.
+
+    Carries the full list of error findings; the message names the first
+    offending op, its source module, and the violated invariant.
+    """
+
+    def __init__(self, findings: Sequence[Finding]) -> None:
+        self.findings = tuple(findings)
+        first = self.findings[0] if self.findings else None
+        head = (f"static verification found {len(self.findings)} invariant "
+                f"violation(s)")
+        if first is not None:
+            head += f"; first: {first}"
+        super().__init__(head)
+
+
+def errors(findings: Iterable[Finding]) -> list[Finding]:
+    return [f for f in findings if f.severity == "error"]
+
+
+def enforce(findings: Sequence[Finding], mode: str, subject: str = "") -> None:
+    """Apply the configured policy to a batch of findings.
+
+    ``strict`` raises :class:`VerifyError` on any error finding; ``warn``
+    emits one :class:`UserWarning` summarizing the waived errors; ``off``
+    is a no-op (callers normally skip verification entirely).
+    """
+    if mode not in VERIFY_MODES:
+        raise ValueError(f"unknown verify mode {mode!r}; allowed: "
+                         f"{VERIFY_MODES}")
+    if mode == "off":
+        return
+    errs = errors(findings)
+    if not errs:
+        return
+    if mode == "strict":
+        raise VerifyError(errs)
+    warnings.warn(
+        f"repro.verify: waived {len(errs)} invariant violation(s) "
+        f"(verify='warn'){' in ' + subject if subject else ''}; first: "
+        f"{errs[0]}", UserWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# (1) Well-formedness: SSA, dead values, symbolic shape/dtype inference.
+# ---------------------------------------------------------------------------
+
+#: Kinds whose output shape equals their first input's shape.
+_SHAPE_PASSTHROUGH = frozenset({
+    ir.OpKind.EW_UNARY, ir.OpKind.AFFINE, ir.OpKind.ROW_NORM,
+    ir.OpKind.ROW_SOFTMAX,
+})
+
+#: Kinds whose output dtype equals their (floating) first input's dtype.
+_DTYPE_PASSTHROUGH = frozenset({
+    ir.OpKind.EW_UNARY, ir.OpKind.AFFINE, ir.OpKind.ROW_NORM,
+    ir.OpKind.ROW_SOFTMAX, ir.OpKind.POOL2D,
+})
+
+
+def _broadcast_shapes(a: tuple[int, ...], b: tuple[int, ...]
+                      ) -> tuple[int, ...] | None:
+    """Numpy-style broadcast, returning None on incompatibility — written
+    out locally so a drift in the production rule cannot hide itself."""
+    n = max(len(a), len(b))
+    ax = (1,) * (n - len(a)) + tuple(a)
+    bx = (1,) * (n - len(b)) + tuple(b)
+    out = []
+    for x, y in zip(ax, bx):
+        if x == y or x == 1 or y == 1:
+            out.append(max(x, y))
+        else:
+            return None
+    return tuple(out)
+
+
+def _derive_op_shape(op: ir.OpNode,
+                     shapes: Mapping[str, tuple[int, ...]]
+                     ) -> tuple[int, ...] | None:
+    """Symbolic output shape of one op, re-derived from the op semantics
+    (deliberately *not* a call into :func:`ir.infer_shapes`)."""
+    ins = [tuple(shapes[v]) for v in op.inputs if v in shapes]
+    if len(ins) != len(op.inputs):
+        return None
+    if op.kind == ir.OpKind.POOL2D:
+        if len(ins[0]) != 4:
+            return None
+        n, h, w, c = ins[0]
+        kh, kw = op.attrs["window"]
+        sh, sw = op.attrs["stride"]
+        ph, pw = op.attrs["padding"]
+        # (e + 2p - k) // s + 1, written inline: the independent derivation.
+        oh = (h + 2 * ph - kh) // sh + 1
+        ow = (w + 2 * pw - kw) // sw + 1
+        return (n, oh, ow, c)
+    if op.kind == ir.OpKind.EW_BINARY and not op.params and len(ins) == 2:
+        return _broadcast_shapes(ins[0], ins[1])
+    if op.kind in _SHAPE_PASSTHROUGH or op.kind == ir.OpKind.EW_BINARY:
+        return ins[0]
+    return None                     # opaque/backbone kinds: no claim here
+
+
+def check_program(program: ir.StackProgram,
+                  shapes: Mapping[str, tuple[int, ...]] | None = None,
+                  dtypes: Mapping[str, Any] | None = None) -> list[Finding]:
+    """Well-formedness of one StackProgram: SSA structure, dead values,
+    fn-table membership, and symbolic shape/dtype inference cross-checked
+    against :func:`ir.infer_shapes` and the recorded avals."""
+    fs: list[Finding] = []
+    name = program.name
+
+    defined: set[str] = set(program.inputs)
+    ssa_ok = True
+    for op in program.ops:
+        for v in op.inputs:
+            if v not in defined:
+                ssa_ok = False
+                fs.append(Finding(
+                    "program.def-before-use", "error", f"{name}/{op.name}",
+                    f"op reads {v!r} before it is defined"))
+        if op.output in defined:
+            ssa_ok = False
+            fs.append(Finding(
+                "program.redefinition", "error", f"{name}/{op.name}",
+                f"value {op.output!r} is redefined"))
+        defined.add(op.output)
+        if op.kind == ir.OpKind.EW_UNARY and op.fn not in ir._UNARY_FNS:
+            fs.append(Finding(
+                "program.unknown-fn", "error", f"{name}/{op.name}",
+                f"unary fn {op.fn!r} has no semantics rule"))
+        if op.kind == ir.OpKind.EW_BINARY and op.fn not in ir._BINARY_FNS:
+            fs.append(Finding(
+                "program.unknown-fn", "error", f"{name}/{op.name}",
+                f"binary fn {op.fn!r} has no semantics rule"))
+        if op.kind == ir.OpKind.POOL2D:
+            missing = [k for k in ("window", "stride", "padding")
+                       if k not in op.attrs]
+            if op.fn not in ("max", "avg") or missing:
+                fs.append(Finding(
+                    "program.unknown-fn", "error", f"{name}/{op.name}",
+                    f"pool2d fn {op.fn!r} / missing attrs {missing}"))
+    for v in program.outputs:
+        if v not in defined:
+            fs.append(Finding(
+                "program.output-undefined", "error", name,
+                f"output {v!r} is never defined"))
+
+    consumed = {v for op in program.ops for v in op.inputs}
+    consumed.update(program.outputs)
+    for op in program.ops:
+        if op.output not in consumed:
+            fs.append(Finding(
+                "program.dead-value", "warning", f"{name}/{op.name}",
+                f"value {op.output!r} is produced but never consumed"))
+
+    if ssa_ok and not any(f.invariant == "program.unknown-fn" for f in fs):
+        fs.extend(_check_program_avals(program, shapes, dtypes))
+    return fs
+
+
+def _check_program_avals(program: ir.StackProgram,
+                         shapes: Mapping[str, tuple[int, ...]] | None,
+                         dtypes: Mapping[str, Any] | None) -> list[Finding]:
+    fs: list[Finding] = []
+    name = program.name
+    in_shapes = {v: tuple(shapes[v]) for v in program.inputs
+                 if shapes and v in shapes}
+    if len(in_shapes) != len(program.inputs):
+        return fs                   # not enough recorded avals to check
+
+    # Local symbolic inference (independent derivation).
+    local: dict[str, tuple[int, ...] | None] = dict(in_shapes)
+    for op in program.ops:
+        local[op.output] = _derive_op_shape(op, {
+            k: v for k, v in local.items() if v is not None})
+
+    # Production inference (the engine under test).
+    try:
+        prod: Mapping[str, tuple[int, ...]] | None = ir.infer_shapes(
+            program, in_shapes)
+    except Exception as e:          # inference engine itself blew up
+        prod = None
+        fs.append(Finding(
+            "program.shape-mismatch", "error", name,
+            f"ir.infer_shapes failed: {type(e).__name__}: {e}"))
+
+    for op in program.ops:
+        want = local.get(op.output)
+        if want is None:
+            if op.kind == ir.OpKind.EW_BINARY and not op.params:
+                fs.append(Finding(
+                    "program.shape-mismatch", "error", f"{name}/{op.name}",
+                    "binary operand shapes are not broadcast-compatible"))
+            continue
+        if prod is not None and tuple(prod[op.output]) != want:
+            fs.append(Finding(
+                "program.shape-mismatch", "error", f"{name}/{op.name}",
+                f"ir.infer_shapes says {tuple(prod[op.output])}, "
+                f"re-derivation says {want}"))
+        if shapes and op.output in shapes \
+                and tuple(shapes[op.output]) != want:
+            fs.append(Finding(
+                "program.shape-mismatch", "error", f"{name}/{op.name}",
+                f"recorded aval {tuple(shapes[op.output])} != re-derived "
+                f"{want}"))
+        fs.extend(_check_op_dtype(op, dtypes, name, "program"))
+    return fs
+
+
+def _check_op_dtype(op: ir.OpNode, dtypes: Mapping[str, Any] | None,
+                    owner: str, family: str) -> list[Finding]:
+    """Conservative dtype pass-through check: only claimed for kinds whose
+    semantics preserve a floating input dtype."""
+    import numpy as np
+    if not dtypes or op.kind not in _DTYPE_PASSTHROUGH:
+        return []
+    din = dtypes.get(op.inputs[0]) if op.inputs else None
+    dout = dtypes.get(op.output)
+    if din is None or dout is None:
+        return []
+    try:
+        if not np.issubdtype(np.dtype(din), np.floating):
+            return []
+        if np.dtype(din) != np.dtype(dout):
+            return [Finding(
+                f"{family}.dtype-mismatch", "error",
+                f"{owner}/{op.name}",
+                f"recorded output dtype {np.dtype(dout)} != input dtype "
+                f"{np.dtype(din)} for dtype-preserving kind "
+                f"{op.kind.value}")]
+    except TypeError:
+        return []
+    return []
+
+
+def check_graph(graph: ir.NetGraph,
+                shapes: Mapping[str, tuple[int, ...]] | None = None,
+                dtypes: Mapping[str, Any] | None = None,
+                keep: frozenset[str] | set[str] = frozenset()
+                ) -> list[Finding]:
+    """Well-formedness of a traced NetGraph: SSA, dead values (ops whose
+    output neither a later op, the graph output, nor a traced out-ref in
+    ``keep`` consumes), plus shape/dtype consistency of the recorded avals
+    where the op semantics determine them."""
+    fs: list[Finding] = []
+    name = graph.name
+    defined: set[str] = {graph.input}
+    ssa_ok = True
+    for op in graph.ops:
+        for v in op.inputs:
+            if v not in defined:
+                ssa_ok = False
+                fs.append(Finding(
+                    "graph.def-before-use", "error", f"{name}/{op.name}",
+                    f"op reads {v!r} before it is defined"))
+        if op.output in defined:
+            ssa_ok = False
+            fs.append(Finding(
+                "graph.redefinition", "error", f"{name}/{op.name}",
+                f"value {op.output!r} is redefined"))
+        defined.add(op.output)
+    if graph.output not in defined:
+        fs.append(Finding(
+            "graph.output-undefined", "error", name,
+            f"graph output {graph.output!r} is never defined"))
+
+    consumed = {v for op in graph.ops for v in op.inputs}
+    consumed.add(graph.output)
+    consumed.update(keep)
+    for op in graph.ops:
+        if op.output not in consumed:
+            fs.append(Finding(
+                "graph.dead-value", "warning", f"{name}/{op.name}",
+                f"value {op.output!r} is produced but never consumed "
+                f"(trace() should have pruned it)"))
+
+    if ssa_ok and shapes:
+        for op in graph.ops:
+            want = _derive_op_shape(op, shapes)
+            if want is None and op.kind in (ir.OpKind.OPAQUE,
+                                            ir.OpKind.KERNEL):
+                rec = op.attrs.get("out_shape")
+                want = tuple(rec) if rec is not None else None
+            if want is None and op.kind == ir.OpKind.MATMUL \
+                    and op.inputs[0] in shapes:
+                want = tuple(shapes[op.inputs[0]])[:-1] + (
+                    op.attrs["features_out"],)
+            if want is not None and op.output in shapes \
+                    and tuple(shapes[op.output]) != tuple(want):
+                fs.append(Finding(
+                    "graph.shape-mismatch", "error", f"{name}/{op.name}",
+                    f"recorded aval {tuple(shapes[op.output])} != "
+                    f"re-derived {tuple(want)}"))
+            fs.extend(_check_op_dtype(op, dtypes, name, "graph"))
+    return fs
+
+
+# ---------------------------------------------------------------------------
+# (2) CollapsePlan legality: partition, tile/halo arithmetic, VMEM budget.
+# ---------------------------------------------------------------------------
+
+def check_plan(plan: Any, *, itemsize: int,
+               differentiable: bool = False) -> list[Finding]:
+    """Legality of one CollapsePlan: the sequence split must partition the
+    program exactly; tiles must cover the output extent; every sequence's
+    VMEM working set — recomputed through :mod:`repro.core.resource`, the
+    joint fwd+bwd one when ``differentiable`` — must fit the device."""
+    fs: list[Finding] = []
+    name = plan.program.name
+    fs.extend(_check_partition(plan))
+    if errors(fs):
+        return fs                   # tile/budget math needs a sane split
+
+    in_shapes = {k: tuple(v) for k, v in plan.input_shapes}
+    if any(v not in in_shapes for v in plan.program.inputs):
+        return fs
+    try:
+        shapes = ir.infer_shapes(plan.program, in_shapes)
+    except Exception:
+        return fs                   # program-level checks already flag this
+
+    try:
+        needs = resource.plan_vmem_bytes(plan, itemsize=itemsize,
+                                         differentiable=differentiable)
+    except Exception as e:
+        fs.append(Finding(
+            "plan.budget-exceeded", "error", name,
+            f"VMEM recomputation failed: {type(e).__name__}: {e}"))
+        return fs
+    limit = plan.device.resource_limit
+    for i, need in enumerate(needs):
+        if need > limit:
+            kind = "joint fwd+bwd" if differentiable else "forward"
+            fs.append(Finding(
+                "plan.budget-exceeded", "error", f"{name}/seq{i}",
+                f"{kind} working set {need}B exceeds device budget "
+                f"{limit}B on {plan.device.name}"))
+
+    if plan.program.layout == "nhwc":
+        fs.extend(_check_nhwc_plan(plan, shapes))
+    else:
+        fs.extend(_check_rows_plan(plan, shapes))
+    return fs
+
+
+def _check_partition(plan: Any) -> list[Finding]:
+    fs: list[Finding] = []
+    name = plan.program.name
+    seq_ops = [op for s in plan.sequences for op in s.ops]
+    prog_ops = list(plan.program.ops)
+    if seq_ops == prog_ops:
+        return fs
+    seq_ids = [id(op) for op in seq_ops]
+    prog_ids = [id(op) for op in prog_ops]
+    dup = [op.name for op in seq_ops if seq_ids.count(id(op)) > 1]
+    if dup:
+        fs.append(Finding(
+            "plan.partition-overlap", "error", name,
+            f"ops assigned to more than one sequence: {sorted(set(dup))}"))
+    missing = [op.name for op in prog_ops if id(op) not in seq_ids]
+    extra = [op.name for op in seq_ops if id(op) not in prog_ids]
+    if missing or extra or (not dup and seq_ops != prog_ops):
+        detail = []
+        if missing:
+            detail.append(f"missing ops {missing}")
+        if extra:
+            detail.append(f"foreign ops {extra}")
+        if not detail:
+            detail.append("ops reordered across sequences")
+        fs.append(Finding(
+            "plan.partition-gap", "error", name,
+            "sequence split does not partition the program: "
+            + "; ".join(detail)))
+    return fs
+
+
+def _check_rows_plan(plan: Any, shapes: Mapping[str, tuple[int, ...]]
+                     ) -> list[Finding]:
+    fs: list[Finding] = []
+    name = plan.program.name
+    sublane = plan.device.sublane
+    for i, seq in enumerate(plan.sequences):
+        tile = seq.tile_rows or 256          # codegen's default geometry
+        if tile < 1:
+            fs.append(Finding(
+                "plan.tile-coverage", "error", f"{name}/seq{i}",
+                f"tile_rows={seq.tile_rows} is not positive"))
+        elif tile % sublane:
+            fs.append(Finding(
+                "plan.tile-coverage", "warning", f"{name}/seq{i}",
+                f"tile_rows={tile} is not a sublane ({sublane}) multiple"))
+    return fs
+
+
+def _receptive_field(ops: Sequence[ir.OpNode], axis: int,
+                     start: int, length: int) -> tuple[int, int]:
+    """Input interval needed to produce output ``[start, start+length)``
+    after ``ops`` — the independent halo derivation: compose the interval
+    map of each pooling op backwards.  ``axis`` 0 = H, 1 = W."""
+    lo, n = start, length
+    for op in reversed(ops):
+        if op.kind != ir.OpKind.POOL2D:
+            continue
+        k = op.attrs["window"][axis]
+        s = op.attrs["stride"][axis]
+        p = op.attrs["padding"][axis]
+        # output position o consumes inputs [o*s - p, o*s - p + k)
+        lo = lo * s - p
+        n = (n - 1) * s + k
+    return lo, n
+
+
+def _check_nhwc_plan(plan: Any, shapes: Mapping[str, tuple[int, ...]]
+                     ) -> list[Finding]:
+    """Tile coverage plus halo arithmetic: re-derive the kernel planner's
+    per-level extents/origins via receptive-field interval composition and
+    require exact agreement."""
+    fs: list[Finding] = []
+    name = plan.program.name
+    for i, seq in enumerate(plan.sequences):
+        sub = plan.subprogram(i)
+        if sub.inputs[0] not in shapes or sub.outputs[0] not in shapes:
+            continue
+        in_shape = shapes[sub.inputs[0]]
+        out_shape = shapes[sub.outputs[0]]
+        if len(in_shape) != 4 or len(out_shape) != 4:
+            continue
+        _, oh, ow, _ = out_shape
+        th = min(seq.tile_out_h or 8, oh)
+        tw = min(seq.tile_out_w or 8, ow)
+        subj = f"{name}/seq{i}"
+        fs.extend(_check_tile_cover(subj, oh, th, "h"))
+        fs.extend(_check_tile_cover(subj, ow, tw, "w"))
+
+        # The kernel planner's levels (the artifact under test).
+        image_hw = [(in_shape[1], in_shape[2])]
+        for op in sub.ops:
+            s = shapes.get(op.output)
+            if s is None or len(s) != 4:
+                break
+            image_hw.append((s[1], s[2]))
+        if len(image_hw) != len(sub.ops) + 1:
+            continue
+        levels = nhwc._plan_levels(sub.ops, th, tw, image_hw)
+        fs.extend(check_nhwc_levels(sub, levels, th, tw, image_hw,
+                                    subject=subj))
+    return fs
+
+
+def _check_tile_cover(subject: str, extent: int, tile: int, ax: str
+                      ) -> list[Finding]:
+    fs: list[Finding] = []
+    if tile < 1:
+        return [Finding("plan.tile-coverage", "error", subject,
+                        f"tile_out_{ax}={tile} is not positive")]
+    pad = (-extent) % tile
+    n_tiles = (extent + pad) // tile
+    if n_tiles * tile < extent:
+        fs.append(Finding(
+            "plan.tile-coverage", "error", subject,
+            f"{n_tiles} tiles of {tile} cover only {n_tiles * tile} of "
+            f"{extent} output positions on axis {ax}"))
+    if n_tiles > 1 and (n_tiles - 1) * tile >= extent:
+        fs.append(Finding(
+            "plan.tile-coverage", "error", subject,
+            f"tile {n_tiles - 1} on axis {ax} starts at "
+            f"{(n_tiles - 1) * tile}, beyond output extent {extent} "
+            f"(dead tile)"))
+    return fs
+
+
+def check_nhwc_levels(program: ir.StackProgram, levels: Sequence[Any],
+                      th: int, tw: int,
+                      image_hw: Sequence[tuple[int, int]],
+                      subject: str = "") -> list[Finding]:
+    """Cross-check kernel planner levels against the independently derived
+    receptive-field intervals.  ``levels[i]`` describes the input of
+    ``program.ops[i]`` (plus one output level at the end); the kernel loads
+    ``[t*tile*mul - off, ... + extent)`` at each level, which must equal
+    the receptive field of output tile ``t``."""
+    fs: list[Finding] = []
+    subject = subject or program.name
+    ops = program.ops
+    if len(levels) != len(ops) + 1:
+        return [Finding(
+            "plan.halo-mismatch", "error", subject,
+            f"planner produced {len(levels)} levels for {len(ops)} ops")]
+    for i, lv in enumerate(levels):
+        tail = ops[i:]
+        for axis, tile, ext, mul, off, img in (
+                (0, th, lv.extent_h, lv.mul_h, lv.off_h, lv.image_h),
+                (1, tw, lv.extent_w, lv.mul_w, lv.off_w, lv.image_w)):
+            ax = "hw"[axis]
+            lo0, n0 = _receptive_field(tail, axis, 0, tile)
+            lo1, _ = _receptive_field(tail, axis, tile, tile)
+            if -off != lo0:
+                fs.append(Finding(
+                    "plan.halo-mismatch", "error", f"{subject}/level{i}",
+                    f"axis {ax}: tile 0 loads from {-off}, receptive "
+                    f"field starts at {lo0} (halo origin off by "
+                    f"{lo0 + off})"))
+            if tile * mul != lo1 - lo0:
+                fs.append(Finding(
+                    "plan.halo-mismatch", "error", f"{subject}/level{i}",
+                    f"axis {ax}: tile stride {tile * mul} != receptive-"
+                    f"field stride {lo1 - lo0}"))
+            if ext < n0:
+                fs.append(Finding(
+                    "plan.halo-mismatch", "error", f"{subject}/level{i}",
+                    f"axis {ax}: level extent {ext} < receptive field "
+                    f"{n0} — tile under-covers its halo"))
+            want_img = image_hw[i][axis]
+            if img != want_img:
+                fs.append(Finding(
+                    "plan.halo-mismatch", "error", f"{subject}/level{i}",
+                    f"axis {ax}: level image extent {img} != inferred "
+                    f"image extent {want_img} (mis-masked borders)"))
+    return fs
+
+
+def check_differentiable(program: ir.StackProgram,
+                         subject: str = "") -> list[Finding]:
+    """Every op of a differentiable plan must have a VJP rule *now*, not a
+    ``NotImplementedError`` at the first ``jax.grad`` call."""
+    fs: list[Finding] = []
+    subject = subject or program.name
+    for op in program.ops:
+        why = None
+        if op.kind not in autodiff.DIFFERENTIABLE_KINDS:
+            why = f"kind {op.kind.value} has no VJP rule"
+        elif op.kind == ir.OpKind.EW_UNARY \
+                and op.fn not in autodiff._UNARY_DERIVS:
+            why = f"unary fn {op.fn!r} has no entry in the derivative table"
+        elif op.kind == ir.OpKind.EW_BINARY \
+                and op.fn not in autodiff.BINARY_VJP_FNS:
+            why = f"binary fn {op.fn!r} has no VJP rule"
+        if why is not None:
+            fs.append(Finding(
+                "plan.missing-vjp", "error", f"{subject}/{op.name}", why))
+    return fs
+
+
+# ---------------------------------------------------------------------------
+# (3) pallas grid write-race detection.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WriteSpec:
+    """The write model of one pallas output: the grid, the output BlockSpec
+    (block shape + index map), the array it writes, and — when the kernel
+    accumulates — which sanctioned idiom it claims.
+
+    ``accumulate``:
+
+    * ``None`` — plain writes: every grid point must address a distinct
+      block (disjointness is *proved* by enumeration below).
+    * ``"grid-sum"`` — the sequential-grid reduction idiom (rows_bwd /
+      nhwc_bwd parameter-gradient accumulators): every grid point must
+      address the *same single* block; the TPU grid is sequential so
+      ``ref[...] +=`` is race-free.
+    * ``"overlap-slot"`` — the halo overlap-add idiom (nhwc_bwd input
+      cotangent): each grid point owns a private patch slot (disjoint
+      writes); the *logical* overlap is resolved by the wrapper's
+      overlap-add outside the kernel.
+    """
+
+    name: str
+    grid: tuple[int, ...]
+    block_shape: tuple[int, ...]
+    index_map: Callable[..., tuple[int, ...]]
+    array_shape: tuple[int, ...]
+    accumulate: str | None = None
+
+
+def _grid_points(grid: tuple[int, ...]) -> tuple[list[tuple[int, ...]], bool]:
+    total = 1
+    for g in grid:
+        total *= max(g, 0)
+    if total <= 0:
+        return [], False
+    pts: list[tuple[int, ...]] = [()]
+    for g in grid:
+        pts = [p + (i,) for p in pts for i in range(g)]
+        if len(pts) > _GRID_ENUM_CAP:
+            return pts[:_GRID_ENUM_CAP], True
+    return pts, False
+
+
+def check_write_spec(spec: WriteSpec) -> list[Finding]:
+    """Symbolically evaluate ``spec.index_map`` over every grid point and
+    prove the write pattern sound for its declared idiom."""
+    fs: list[Finding] = []
+    pts, truncated = _grid_points(spec.grid)
+    if truncated:
+        fs.append(Finding(
+            "grid.write-race", "warning", spec.name,
+            f"grid {spec.grid} exceeds the enumeration cap "
+            f"{_GRID_ENUM_CAP}; only a prefix was verified"))
+    if not pts:
+        return fs
+    n_blocks = tuple(-(-a // b) for a, b in
+                     zip(spec.array_shape, spec.block_shape))
+    seen: dict[tuple[int, ...], tuple[int, ...]] = {}
+    for p in pts:
+        try:
+            idx = tuple(int(c) for c in spec.index_map(*p))
+        except Exception as e:
+            fs.append(Finding(
+                "grid.write-race", "error", spec.name,
+                f"index map failed at grid point {p}: "
+                f"{type(e).__name__}: {e}"))
+            return fs
+        if len(idx) != len(spec.block_shape):
+            fs.append(Finding(
+                "grid.write-race", "error", spec.name,
+                f"index map returned rank {len(idx)} for block rank "
+                f"{len(spec.block_shape)}"))
+            return fs
+        for d, c in enumerate(idx):
+            if c < 0 or c >= n_blocks[d]:
+                fs.append(Finding(
+                    "grid.out-of-bounds", "error", spec.name,
+                    f"grid point {p} writes block {idx}, outside the "
+                    f"{n_blocks} block grid of array {spec.array_shape}"))
+                return fs
+        if spec.accumulate == "grid-sum":
+            continue                # handled below: all points, one block
+        if idx in seen:
+            fs.append(Finding(
+                "grid.write-race", "error", spec.name,
+                f"grid points {seen[idx]} and {p} both write block {idx} "
+                f"without a sanctioned accumulation idiom"))
+            return fs
+        seen[idx] = p
+    if spec.accumulate == "grid-sum":
+        blocks = {tuple(int(c) for c in spec.index_map(*p)) for p in pts}
+        if len(blocks) != 1:
+            fs.append(Finding(
+                "grid.accumulator", "error", spec.name,
+                f"grid-sum accumulator addresses {len(blocks)} distinct "
+                f"blocks {sorted(blocks)[:4]} — the sequential-grid "
+                f"reduction idiom requires exactly one shared block"))
+    return fs
+
+
+def plan_write_specs(plan: Any, *, differentiable: bool = False
+                     ) -> list[WriteSpec]:
+    """Build the write model of every generated kernel this plan compiles
+    to — forward and (when ``differentiable``) backward — from the index
+    maps the kernel modules themselves install in their BlockSpecs."""
+    specs: list[WriteSpec] = []
+    in_shapes = {k: tuple(v) for k, v in plan.input_shapes}
+    if any(v not in in_shapes for v in plan.program.inputs):
+        return specs
+    try:
+        shapes = ir.infer_shapes(plan.program, in_shapes)
+    except Exception:
+        return specs
+    for i, seq in enumerate(plan.sequences):
+        try:
+            sub = plan.subprogram(i)
+        except Exception:
+            continue
+        if plan.program.layout == "rows":
+            specs.extend(_rows_write_specs(sub, seq, shapes, differentiable))
+        else:
+            specs.extend(_nhwc_write_specs(sub, seq, shapes, differentiable))
+    return specs
+
+
+def _rows_count(shape: tuple[int, ...]) -> int:
+    n = 1
+    for d in shape[:-1]:
+        n *= d
+    return n
+
+
+def _rows_write_specs(sub: ir.StackProgram, seq: Any,
+                      shapes: Mapping[str, tuple[int, ...]],
+                      differentiable: bool) -> list[WriteSpec]:
+    specs: list[WriteSpec] = []
+    if any(v not in shapes for v in sub.inputs):
+        return specs
+    tile = seq.tile_rows or 256
+    if tile < 1:
+        return specs
+    n_rows = _rows_count(shapes[sub.inputs[0]])
+    padded = n_rows + ((-n_rows) % tile)
+    grid = (padded // tile,)
+    for m in rows.write_model(sub, shapes, tile, padded):
+        specs.append(WriteSpec(
+            name=f"{sub.name}:fwd:{m['name']}", grid=grid,
+            block_shape=m["block_shape"], index_map=m["index_map"],
+            array_shape=m["array_shape"], accumulate=m["accumulate"]))
+    if differentiable:
+        for m in rows_bwd.write_model(sub, shapes, tile, padded):
+            specs.append(WriteSpec(
+                name=f"{sub.name}:bwd:{m['name']}", grid=grid,
+                block_shape=m["block_shape"], index_map=m["index_map"],
+                array_shape=m["array_shape"], accumulate=m["accumulate"]))
+    return specs
+
+
+def _nhwc_write_specs(sub: ir.StackProgram, seq: Any,
+                      shapes: Mapping[str, tuple[int, ...]],
+                      differentiable: bool) -> list[WriteSpec]:
+    specs: list[WriteSpec] = []
+    out_shape = shapes.get(sub.outputs[0])
+    in_shape = shapes.get(sub.inputs[0])
+    if out_shape is None or in_shape is None or len(out_shape) != 4 \
+            or len(in_shape) != 4:
+        return specs
+    n, oh, ow, c = out_shape
+    th = min(seq.tile_out_h or 8, oh)
+    tw = min(seq.tile_out_w or 8, ow)
+    if th < 1 or tw < 1:
+        return specs
+    gh = (oh + ((-oh) % th)) // th
+    gw = (ow + ((-ow) % tw)) // tw
+    grid = (n, gh, gw)
+    for m in nhwc.write_model(n, oh, ow, c, th, tw):
+        specs.append(WriteSpec(
+            name=f"{sub.name}:fwd:{m['name']}", grid=grid,
+            block_shape=m["block_shape"], index_map=m["index_map"],
+            array_shape=m["array_shape"], accumulate=m["accumulate"]))
+    if differentiable and len(sub.outputs) == 1:
+        image_hw = [(in_shape[1], in_shape[2])]
+        ok = True
+        for op in sub.ops:
+            s = shapes.get(op.output)
+            if s is None or len(s) != 4:
+                ok = False
+                break
+            image_hw.append((s[1], s[2]))
+        if ok:
+            levels = nhwc._plan_levels(sub.ops, th, tw, image_hw)
+            lv0 = levels[0]
+            for m in nhwc_bwd.write_model(sub, grid, lv0.extent_h,
+                                          lv0.extent_w, c):
+                specs.append(WriteSpec(
+                    name=f"{sub.name}:bwd:{m['name']}", grid=grid,
+                    block_shape=m["block_shape"], index_map=m["index_map"],
+                    array_shape=m["array_shape"],
+                    accumulate=m["accumulate"]))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# (4) Registry rewrite soundness.
+# ---------------------------------------------------------------------------
+
+def _numel(shape: Iterable[int]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def check_kernel_op(op: ir.OpNode,
+                    shapes: Mapping[str, tuple[int, ...]] | None = None,
+                    dtypes: Mapping[str, Any] | None = None,
+                    param_shapes: Mapping[str, tuple[int, ...]] | None = None,
+                    differentiable: bool = False) -> list[Finding]:
+    """Soundness of one registry-dispatched KERNEL op: the kernel id must
+    resolve, slot bookkeeping must be consistent, and the recorded arg/out
+    avals must equal the traced avals of the consumed cluster."""
+    import numpy as np
+    fs: list[Finding] = []
+    subject = op.name
+    kernel = op.attrs.get("kernel")
+    if kernel not in registry_mod.REGISTRY:
+        fs.append(Finding(
+            "kernel.unknown", "error", subject,
+            f"kernel id {kernel!r} has no registry entry (known: "
+            f"{sorted(registry_mod.REGISTRY)})"))
+        return fs
+    entry = registry_mod.REGISTRY[kernel]
+
+    slots = tuple(op.attrs.get("slots", ()))
+    in_names = tuple(s[1] for s in slots if s[0] == "in")
+    p_names = tuple(s[1] for s in slots if s[0] == "p")
+    if in_names != tuple(op.inputs) or p_names != tuple(op.params):
+        fs.append(Finding(
+            "kernel.slots-mismatch", "error", subject,
+            f"slots {slots} disagree with op inputs {op.inputs} / params "
+            f"{op.params}"))
+    arg_shapes = tuple(op.attrs.get("arg_shapes", ()))
+    arg_dtypes = tuple(op.attrs.get("arg_dtypes", ()))
+    if len(arg_shapes) != len(slots) or len(arg_dtypes) != len(slots):
+        fs.append(Finding(
+            "kernel.slots-mismatch", "error", subject,
+            f"{len(slots)} slots but {len(arg_shapes)} arg_shapes / "
+            f"{len(arg_dtypes)} arg_dtypes recorded"))
+        return fs
+
+    for slot, rec_shape, rec_dtype in zip(slots, arg_shapes, arg_dtypes):
+        want_shape: tuple[int, ...] | None = None
+        want_dtype: Any = None
+        if slot[0] == "in":
+            if shapes and slot[1] in shapes:
+                want_shape = tuple(shapes[slot[1]])
+            if dtypes and slot[1] in dtypes:
+                want_dtype = dtypes[slot[1]]
+        elif len(slot) > 2 and slot[2] is not None:
+            want_shape, want_dtype = tuple(slot[2][0]), slot[2][1]
+        elif param_shapes and slot[1] in param_shapes:
+            want_shape = tuple(param_shapes[slot[1]])
+        if want_shape is not None and tuple(rec_shape) != want_shape:
+            fs.append(Finding(
+                "kernel.aval-mismatch", "error", subject,
+                f"slot {slot[:2]} recorded shape {tuple(rec_shape)} != "
+                f"traced aval {want_shape}"))
+        if want_dtype is not None \
+                and np.dtype(rec_dtype) != np.dtype(want_dtype):
+            fs.append(Finding(
+                "kernel.aval-mismatch", "error", subject,
+                f"slot {slot[:2]} recorded dtype {rec_dtype} != traced "
+                f"dtype {np.dtype(want_dtype)}"))
+
+    out_shape = op.attrs.get("out_shape")
+    if out_shape is not None:
+        if shapes and op.output in shapes \
+                and tuple(shapes[op.output]) != tuple(out_shape):
+            fs.append(Finding(
+                "kernel.aval-mismatch", "error", subject,
+                f"recorded out_shape {tuple(out_shape)} != traced aval "
+                f"{tuple(shapes[op.output])}"))
+        want_out = registry_mod.expected_out_shape(kernel, arg_shapes)
+        if want_out is not None and tuple(out_shape) != want_out:
+            fs.append(Finding(
+                "kernel.aval-mismatch", "error", subject,
+                f"recorded out_shape {tuple(out_shape)} != kernel "
+                f"{kernel!r} contract {want_out}"))
+        if kernel == "vocab_ce" and len(arg_shapes) == 3 \
+                and _numel(out_shape) != _numel(arg_shapes[2]):
+            fs.append(Finding(
+                "kernel.aval-mismatch", "error", subject,
+                f"vocab_ce emits one loss per gathered index: out_shape "
+                f"{tuple(out_shape)} has {_numel(out_shape)} elements, "
+                f"index slot {tuple(arg_shapes[2])} has "
+                f"{_numel(arg_shapes[2])}"))
+    out_dtype = op.attrs.get("out_dtype")
+    if out_dtype is not None and dtypes and op.output in dtypes \
+            and np.dtype(out_dtype) != np.dtype(dtypes[op.output]):
+        fs.append(Finding(
+            "kernel.aval-mismatch", "error", subject,
+            f"recorded out_dtype {out_dtype} != traced dtype "
+            f"{np.dtype(dtypes[op.output])}"))
+
+    if differentiable and entry.vjp not in ("custom", "ref"):
+        fs.append(Finding(
+            "kernel.no-vjp", "error", subject,
+            f"kernel {kernel!r} declares vjp={entry.vjp!r}; a "
+            f"differentiable net needs 'custom' or 'ref'"))
+    return fs
+
+
+# ---------------------------------------------------------------------------
+# Pipeline entry points.
+# ---------------------------------------------------------------------------
+
+def verify_segments(segments: Sequence[Any], plans: Mapping[int, Any],
+                    shapes: Mapping[str, tuple[int, ...]], config: Any,
+                    *, dtypes: Mapping[str, Any] | None = None,
+                    param_shapes: Mapping[str, tuple[int, ...]] | None = None
+                    ) -> list[Finding]:
+    """The between-compile-stages pass: verify every stack segment's
+    program + plan + generated-kernel write model, and every KERNEL
+    segment's registry soundness.  Called by ``compile_stacks`` after
+    collapse and before codegen."""
+    fs: list[Finding] = []
+    differentiable = bool(getattr(config, "differentiable", False))
+    for idx, seg in enumerate(segments):
+        if getattr(seg, "is_stack", False):
+            fs.extend(check_program(seg.stack, shapes=shapes, dtypes=dtypes))
+            plan = plans.get(idx)
+            if plan is None:
+                continue
+            fs.extend(check_plan(plan, itemsize=config.itemsize,
+                                 differentiable=differentiable))
+            if differentiable:
+                fs.extend(check_differentiable(seg.stack))
+            for spec in plan_write_specs(plan,
+                                         differentiable=differentiable):
+                fs.extend(check_write_spec(spec))
+        elif getattr(seg, "op", None) is not None \
+                and seg.op.kind == ir.OpKind.KERNEL:
+            fs.extend(check_kernel_op(seg.op, shapes=shapes, dtypes=dtypes,
+                                      param_shapes=param_shapes,
+                                      differentiable=differentiable))
+    return fs
+
+
+def verify_trace(tr: Any) -> list[Finding]:
+    """Graph-level checks over a TraceResult (before segmentation)."""
+    keep = {ref for kind, ref in tr.out_refs if kind == "env"}
+    return check_graph(tr.graph, shapes=tr.shapes, dtypes=tr.dtypes,
+                       keep=keep)

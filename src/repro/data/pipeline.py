@@ -16,7 +16,6 @@ import queue
 import threading
 from typing import Iterator
 
-import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig

@@ -91,6 +91,36 @@ def _plan_levels(ops: tuple[ir.OpNode, ...], out_h: int, out_w: int,
     return levels
 
 
+def out_block_index(i, j, k):
+    """Output BlockSpec index map: grid cell ``(n, i, j)`` owns output
+    patch ``(n, i, j)``.  Module-level (not a lambda) so the static
+    verifier's write model (:func:`write_model`) evaluates the same
+    function the ``pallas_call`` BlockSpec installs."""
+    return (i, j, k, 0)
+
+
+def shared_block_index(i, j, k):
+    """BlockSpec index map for ``(1, C)`` param / broadcast-extra blocks:
+    every grid cell addresses the single shared block."""
+    del i, j, k
+    return (0, 0)
+
+
+def write_model(n: int, oh: int, ow: int, c: int,
+                th: int, tw: int) -> list[dict]:
+    """The forward kernel's output-write geometry, as data, for the static
+    verifier: one ``(1, th, tw, C)`` patch per grid cell into the
+    grid-padded output array (pairwise disjoint by construction — proved,
+    not assumed, by ``repro.core.verify``)."""
+    pad_oh = (-oh) % th
+    pad_ow = (-ow) % tw
+    return [{
+        "name": "out", "block_shape": (1, th, tw, c),
+        "index_map": out_block_index,
+        "array_shape": (n, oh + pad_oh, ow + pad_ow, c),
+        "accumulate": None}]
+
+
 def _pool_tile(x: jnp.ndarray, op: ir.OpNode, out_h: int, out_w: int
                ) -> jnp.ndarray:
     kh, kw = op.attrs["window"]
@@ -279,9 +309,9 @@ def fused_nhwc_call(program: ir.StackProgram,
     pvals = [jnp.asarray(params[p]).reshape(1, -1) for p in pnames]
 
     in_specs = [pl.BlockSpec(memory_space=pl.ANY)]
-    in_specs += [pl.BlockSpec((1, v.shape[-1]), lambda i, j, k: (0, 0))
+    in_specs += [pl.BlockSpec((1, v.shape[-1]), shared_block_index)
                  for v in evals + pvals]
-    out_spec = pl.BlockSpec((1, th, tw, c), lambda i, j, k: (i, j, k, 0))
+    out_spec = pl.BlockSpec((1, th, tw, c), out_block_index)
     out_shape = jax.ShapeDtypeStruct((n, oh + pad_oh, ow + pad_ow, c), x.dtype)
 
     fn = pl.pallas_call(

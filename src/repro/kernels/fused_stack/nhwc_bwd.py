@@ -45,6 +45,35 @@ from repro.core import autodiff, ir
 from repro.kernels.fused_stack import nhwc
 
 
+def patch_block_index(i, j, k):
+    """Input-cotangent BlockSpec index map: grid cell ``(n, i, j)`` owns
+    its private ``(1, 1, 1, eh, ew, C)`` patch slot.  Module-level so the
+    static verifier's write model evaluates the same function the
+    ``pallas_call`` BlockSpec installs."""
+    return (i, j, k, 0, 0, 0)
+
+
+def write_model(program: ir.StackProgram, grid: tuple[int, int, int],
+                eh: int, ew: int, c: int) -> list[dict]:
+    """The backward kernel's output-write geometry, as data, for the
+    static verifier: per-cell private patch slots (the halo overlap-add
+    idiom, ``accumulate='overlap-slot'`` — disjoint slot writes; the
+    wrapper sums the logical overlaps outside the kernel) plus shared
+    ``(1, C)`` grid-sum accumulators for broadcast extras and params."""
+    n, gh, gw = grid
+    models = [{
+        "name": "dx_patches", "block_shape": (1, 1, 1, eh, ew, c),
+        "index_map": patch_block_index,
+        "array_shape": (n, gh, gw, eh, ew, c),
+        "accumulate": "overlap-slot"}]
+    for name in (*program.inputs[1:], *program.param_names):
+        models.append({
+            "name": f"acc:{name}", "block_shape": (1, c),
+            "index_map": nhwc.shared_block_index,
+            "array_shape": (1, c), "accumulate": "grid-sum"})
+    return models
+
+
 def _bwd_kernel(program: ir.StackProgram, levels, pad_off_h: int,
                 pad_off_w: int, n_extra: int, n_params: int, *refs) -> None:
     src_ref = refs[0]
@@ -170,19 +199,18 @@ def fused_nhwc_bwd_call(program: ir.StackProgram,
     pvals = [jnp.asarray(params[p]).reshape(1, -1) for p in pnames]
 
     in_specs = [pl.BlockSpec(memory_space=pl.ANY)]
-    in_specs += [pl.BlockSpec((1, v.shape[-1]), lambda i, j, k: (0, 0))
+    in_specs += [pl.BlockSpec((1, v.shape[-1]), nhwc.shared_block_index)
                  for v in evals + pvals]
-    in_specs += [pl.BlockSpec((1, th, tw, c), lambda i, j, k: (i, j, k, 0))]
+    in_specs += [pl.BlockSpec((1, th, tw, c), nhwc.out_block_index)]
 
     out_shapes = [jax.ShapeDtypeStruct((n, grid[1], grid[2], eh, ew, c),
                                        x.dtype)]
-    out_specs = [pl.BlockSpec((1, 1, 1, eh, ew, c),
-                              lambda i, j, k: (i, j, k, 0, 0, 0))]
+    out_specs = [pl.BlockSpec((1, 1, 1, eh, ew, c), patch_block_index)]
     # grid-summed accumulators: every cell addresses block (0, 0)
     for v in evals + pvals:
         out_shapes.append(jax.ShapeDtypeStruct(v.shape, v.dtype))
         out_specs.append(pl.BlockSpec((1, v.shape[-1]),
-                                      lambda i, j, k: (0, 0)))
+                                      nhwc.shared_block_index))
 
     fn = pl.pallas_call(
         functools.partial(_bwd_kernel, program, levels, left_h, left_w,

@@ -25,6 +25,39 @@ from jax.experimental import pallas as pl
 from repro.core import ir
 
 
+def row_block_index(i):
+    """Output/input BlockSpec index map for ``(tile_rows, F)`` tiles: grid
+    cell ``i`` owns row-block ``i``.  Module-level (not a lambda) so the
+    static verifier's write model (:func:`write_model`) evaluates the
+    *same* function the ``pallas_call`` BlockSpecs install — the race
+    check cannot drift from the kernel."""
+    return (i, 0)
+
+
+def shared_block_index(i):
+    """BlockSpec index map for ``(1, F)`` parameter blocks: every grid
+    cell addresses the single shared block."""
+    del i
+    return (0, 0)
+
+
+def write_model(program: ir.StackProgram,
+                shapes: Mapping[str, tuple[int, ...]],
+                tile_rows: int, padded_rows: int) -> list[dict]:
+    """The forward kernel's output-write geometry, as data: one entry per
+    program output with the grid-evaluable index map, block shape, and
+    destination array shape :func:`fused_rows_call` will use.  Consumed by
+    ``repro.core.verify`` to prove pairwise-disjoint writes."""
+    models = []
+    for name in program.outputs:
+        f = shapes[name][-1]
+        models.append({
+            "name": name, "block_shape": (tile_rows, f),
+            "index_map": row_block_index,
+            "array_shape": (padded_rows, f), "accumulate": None})
+    return models
+
+
 def _kernel(program: ir.StackProgram, n_inputs: int, n_params: int,
             *refs) -> None:
     in_refs = refs[:n_inputs]
@@ -99,11 +132,11 @@ def fused_rows_call(program: ir.StackProgram,
     # Infer output shapes/dtypes from the interpreter on ShapeDtypeStructs.
     out_shapes = _infer_outputs(program, flat, names, pnames, pvals)
 
-    in_specs = [pl.BlockSpec((tile_rows, a.shape[-1]), lambda i: (i, 0))
+    in_specs = [pl.BlockSpec((tile_rows, a.shape[-1]), row_block_index)
                 for a in flat]
-    in_specs += [pl.BlockSpec((1, v.shape[-1]), lambda i: (0, 0))
+    in_specs += [pl.BlockSpec((1, v.shape[-1]), shared_block_index)
                  for v in pvals]
-    out_specs = [pl.BlockSpec((tile_rows, s.shape[-1]), lambda i: (i, 0))
+    out_specs = [pl.BlockSpec((tile_rows, s.shape[-1]), row_block_index)
                  for s in out_shapes]
 
     fn = pl.pallas_call(

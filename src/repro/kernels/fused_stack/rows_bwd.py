@@ -33,6 +33,31 @@ from repro.core import autodiff, ir
 from repro.kernels.fused_stack import rows
 
 
+def write_model(program: ir.StackProgram,
+                shapes: Mapping[str, tuple[int, ...]],
+                tile_rows: int, padded_rows: int) -> list[dict]:
+    """The backward kernel's output-write geometry, as data, for the
+    static verifier: one disjoint ``(tile_rows, F)`` cotangent block per
+    input, plus one shared ``(1, F)`` accumulator per parameter — the
+    sanctioned sequential-grid reduction idiom (``accumulate='grid-sum'``:
+    every grid cell must address the *same* block)."""
+    models = []
+    for name in program.inputs:
+        f = shapes[name][-1]
+        models.append({
+            "name": f"din:{name}", "block_shape": (tile_rows, f),
+            "index_map": rows.row_block_index,
+            "array_shape": (padded_rows, f), "accumulate": None})
+    for pname in program.param_names:
+        f = next((shapes[op.output][-1] for op in program.ops
+                  if pname in op.params and op.output in shapes), 1)
+        models.append({
+            "name": f"dparam:{pname}", "block_shape": (1, f),
+            "index_map": rows.shared_block_index,
+            "array_shape": (1, f), "accumulate": "grid-sum"})
+    return models
+
+
 def _bwd_kernel(program: ir.StackProgram, n_inputs: int, n_params: int,
                 n_outputs: int, tile_rows: int, valid_rows: int | None,
                 *refs) -> None:
@@ -113,16 +138,16 @@ def fused_rows_bwd_call(program: ir.StackProgram,
     din_shapes = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat]
     dparam_shapes = [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in pvals]
 
-    in_specs = [pl.BlockSpec((tile_rows, a.shape[-1]), lambda i: (i, 0))
+    in_specs = [pl.BlockSpec((tile_rows, a.shape[-1]), rows.row_block_index)
                 for a in flat]
-    in_specs += [pl.BlockSpec((1, v.shape[-1]), lambda i: (0, 0))
+    in_specs += [pl.BlockSpec((1, v.shape[-1]), rows.shared_block_index)
                  for v in pvals]
-    in_specs += [pl.BlockSpec((tile_rows, g.shape[-1]), lambda i: (i, 0))
-                 for g in gflat]
-    out_specs = [pl.BlockSpec((tile_rows, a.shape[-1]), lambda i: (i, 0))
-                 for a in flat]
+    in_specs += [pl.BlockSpec((tile_rows, g.shape[-1]),
+                              rows.row_block_index) for g in gflat]
+    out_specs = [pl.BlockSpec((tile_rows, a.shape[-1]),
+                              rows.row_block_index) for a in flat]
     # Parameter-grad accumulators: every grid cell addresses block (0, 0).
-    out_specs += [pl.BlockSpec((1, v.shape[-1]), lambda i: (0, 0))
+    out_specs += [pl.BlockSpec((1, v.shape[-1]), rows.shared_block_index)
                   for v in pvals]
 
     fn = pl.pallas_call(

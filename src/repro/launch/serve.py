@@ -36,8 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import LM_SHAPES, get_config
-from repro.configs.base import ModelConfig, RuntimeConfig
+from repro.configs import get_config
+from repro.configs.base import RuntimeConfig
 from repro.core.scheduler import ServeStats
 from repro.kernels.fused_stack.ops import DispatchStats
 from repro.launch import engine as engine_mod

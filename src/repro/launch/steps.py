@@ -14,7 +14,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RuntimeConfig, ShapeConfig
 from repro.distributed import sharding as shd

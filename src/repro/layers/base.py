@@ -15,7 +15,7 @@ Logical axis vocabulary:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

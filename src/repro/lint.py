@@ -1,0 +1,188 @@
+"""Static verification CLI: ``python -m repro.lint``.
+
+Runs the :mod:`repro.core.verify` pass over every shipped architecture
+without executing a single kernel: for each LM arch the block stack
+programs (`repro.layers.stacks`) are instantiated at the config's real
+dimensions, collapsed for the target device in both inference and
+training sizing, and every invariant family is checked — program
+well-formedness, plan legality (partition / tile coverage / halo
+arithmetic / VMEM budget), differentiability coverage, and the
+pallas-grid write model of every kernel the plan would compile to.
+``brainslug-cnn`` verifies the full VGG NetGraph end to end (graph SSA +
+dead values, then each nhwc stack segment).
+
+Exit status is 1 when any *error*-severity finding survives; warnings
+are reported but do not fail the run.  ``--out`` writes the full finding
+list as JSON (the CI lint job uploads it as an artifact).
+
+Usage:
+  python -m repro.lint                       # all archs, report to stdout
+  python -m repro.lint --arch deepseek-7b --arch brainslug-cnn
+  python -m repro.lint --out results/lint/verify_report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.core import analyzer, collapse, ir, resource
+from repro.core import api as core_api
+from repro.core import verify
+
+#: Default row count stack programs are verified at (any multiple of the
+#: sublane works; plans are re-derived per shape at optimize() time anyway).
+_ROWS = 512
+
+_DEVICES = {"tpu_v5e": resource.TPU_V5E, "tiny": resource.TINY_DEVICE}
+
+
+def lint_program(program: ir.StackProgram,
+                 shapes: dict[str, tuple[int, ...]],
+                 device: resource.DeviceSpec,
+                 itemsize: int) -> list[verify.Finding]:
+    """Verify one stack program end to end: well-formedness, then a
+    collapse under both inference and training sizing with plan-legality
+    and write-model checks on each."""
+    fs = verify.check_program(program, shapes=shapes)
+    if verify.errors(fs):
+        return fs                    # collapse needs a well-formed program
+    for differentiable in (False, True):
+        try:
+            plan = collapse.collapse(program, shapes, device,
+                                     itemsize=itemsize,
+                                     differentiable=differentiable)
+        except Exception as e:  # noqa: BLE001 — a lint must not crash
+            fs.append(verify.Finding(
+                "plan.budget-exceeded", "error", program.name,
+                f"collapse failed ({'train' if differentiable else 'infer'}"
+                f" sizing): {type(e).__name__}: {e}"))
+            continue
+        fs.extend(verify.check_plan(plan, itemsize=itemsize,
+                                    differentiable=differentiable))
+        if differentiable:
+            fs.extend(verify.check_differentiable(program))
+        for spec in verify.plan_write_specs(plan,
+                                            differentiable=differentiable):
+            fs.extend(verify.check_write_spec(spec))
+    return fs
+
+
+def lint_lm_arch(arch: str, device: resource.DeviceSpec,
+                 rows: int = _ROWS) -> list[verify.Finding]:
+    """Verify the stack programs an LM arch's blocks dispatch through,
+    at that arch's real dimensions (bf16 sizing)."""
+    from repro.configs import get_config
+    from repro.layers import stacks
+
+    cfg = get_config(arch)
+    has_bias = cfg.norm == "layer"
+    cases = [
+        (stacks.norm_program(cfg.norm, 1e-6, has_bias),
+         {"x": (rows, cfg.d_model)}),
+        (stacks.addnorm_program(cfg.norm, 1e-6, has_bias),
+         {"x": (rows, cfg.d_model), "res": (rows, cfg.d_model)}),
+    ]
+    if cfg.d_ff:
+        cases.append((stacks.glu_program(cfg.act),
+                      {"gate": (rows, cfg.d_ff), "up": (rows, cfg.d_ff)}))
+        cases.append((stacks.act_program(cfg.act),
+                      {"x": (rows, cfg.d_ff)}))
+    fs: list[verify.Finding] = []
+    for program, shapes in cases:
+        fs.extend(lint_program(program, shapes, device, itemsize=2))
+    return fs
+
+
+def lint_cnn(device: resource.DeviceSpec,
+             input_shape: tuple[int, ...] = (1, 32, 32, 3)
+             ) -> list[verify.Finding]:
+    """Verify the paper's CNN domain: full VGG NetGraph (graph-level SSA +
+    dead-value checks), then every nhwc stack segment through the same
+    program/plan/write-model pass (f32 sizing)."""
+    from repro.models import cnn
+
+    graph, _params = cnn.vgg_net()
+    segments = analyzer.analyze(graph, layout="nhwc",
+                                keep=frozenset({graph.output}))
+    shapes: dict[str, tuple[int, ...]] = {graph.input: input_shape}
+    for seg in segments:
+        if seg.is_stack:
+            in_shapes = {v: shapes[v] for v in seg.stack.inputs}
+            shapes.update(ir.infer_shapes(seg.stack, in_shapes))
+        else:
+            core_api._infer_opaque_shape(seg.op, shapes)
+    fs = list(verify.check_graph(graph, shapes=shapes,
+                                 keep=frozenset({graph.output})))
+    for seg in segments:
+        if not seg.is_stack:
+            continue
+        in_shapes = {v: shapes[v] for v in seg.stack.inputs}
+        fs.extend(lint_program(seg.stack, in_shapes, device, itemsize=4))
+    return fs
+
+
+def lint_arch(arch: str, device: resource.DeviceSpec,
+              rows: int = _ROWS) -> list[verify.Finding]:
+    if arch == "brainslug-cnn":
+        return lint_cnn(device)
+    return lint_lm_arch(arch, device, rows)
+
+
+def main(argv=None) -> int:
+    from repro.configs import ARCH_IDS
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Static verification over shipped architectures "
+                    "(repro.core.verify; no kernels are executed).")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="arch id (repeatable); default: all")
+    ap.add_argument("--device", choices=sorted(_DEVICES), default="tpu_v5e")
+    ap.add_argument("--rows", type=int, default=_ROWS,
+                    help="row count LM stack programs are verified at")
+    ap.add_argument("--out", default=None,
+                    help="write the findings as JSON to this path")
+    args = ap.parse_args(argv)
+
+    archs = args.arch or [*ARCH_IDS, "brainslug-cnn"]
+    device = _DEVICES[args.device]
+
+    report: dict = {"device": device.name, "archs": {}}
+    n_errors = n_warnings = 0
+    for arch in archs:
+        try:
+            findings = lint_arch(arch, device, args.rows)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            findings = [verify.Finding(
+                "graph.shape-mismatch", "error", arch,
+                f"lint crashed: {type(e).__name__}: {e}")]
+        errs = verify.errors(findings)
+        warns = [f for f in findings if f.severity != "error"]
+        n_errors += len(errs)
+        n_warnings += len(warns)
+        status = "error" if errs else ("warning" if warns else "clean")
+        report["archs"][arch] = {
+            "status": status,
+            "findings": [f.to_json() for f in findings],
+        }
+        print(f"[{status:>7}] {arch}: {len(errs)} error(s), "
+              f"{len(warns)} warning(s)")
+        for f in findings:
+            print(f"    {f}")
+    report["n_errors"] = n_errors
+    report["n_warnings"] = n_warnings
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"report: {args.out}")
+    print(f"total: {n_errors} error(s), {n_warnings} warning(s) across "
+          f"{len(archs)} arch(s)")
+    return 1 if n_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,6 @@ stacked along the scan axis.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

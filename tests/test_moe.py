@@ -1,7 +1,6 @@
 """MoE dispatch invariants + equivalence against a dense oracle."""
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,485 @@
+"""Seeded-mutation tests for the static verifier (:mod:`repro.core.verify`).
+
+Every mutant corrupts one compile artifact in a way the pipeline that
+*produced* it cannot notice (the corruption is injected after production)
+and asserts the verifier's independent re-derivation catches it under the
+named invariant: raised under ``verify='strict'``, warned-and-recorded
+under ``'warn'``, silent under ``'off'``.  A clean-pass sweep runs the
+same checks over every shipped architecture via :mod:`repro.lint`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import pytest
+
+from repro import api, lint
+from repro.configs import ARCH_IDS
+from repro.core import analyzer, codegen, collapse, ir, resource, verify
+from repro.core import api as core_api
+from repro.core import registry as registry_mod
+from repro.core import trace as trace_mod
+from repro.kernels.fused_stack import nhwc
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders (valid by construction; mutants corrupt copies).
+# ---------------------------------------------------------------------------
+
+def rows_program() -> ir.StackProgram:
+    return ir.StackProgram(
+        name="glu", inputs=("gate", "up"), outputs=("y",), layout="rows",
+        ops=(ir.OpNode(ir.OpKind.EW_UNARY, "act", ("gate",), "a",
+                       fn="silu"),
+             ir.OpNode(ir.OpKind.EW_BINARY, "mul", ("a", "up"), "y",
+                       fn="mul")))
+
+
+ROWS_SHAPES = {"gate": (64, 128), "up": (64, 128)}
+
+
+def nhwc_program() -> ir.StackProgram:
+    return ir.StackProgram(
+        name="block", inputs=("x",), outputs=("r",), layout="nhwc",
+        ops=(ir.OpNode(ir.OpKind.POOL2D, "pool", ("x",), "p", fn="max",
+                       attrs={"window": (3, 3), "stride": (1, 1),
+                              "padding": (1, 1)}),
+             ir.OpNode(ir.OpKind.AFFINE, "bn", ("p",), "b",
+                       params=("s", "o")),
+             ir.OpNode(ir.OpKind.EW_UNARY, "relu", ("b",), "r",
+                       fn="relu")))
+
+
+NHWC_SHAPES = {"x": (1, 16, 16, 8)}
+
+
+def rows_plan(**overrides) -> collapse.CollapsePlan:
+    plan = collapse.collapse(rows_program(), ROWS_SHAPES,
+                             resource.TPU_V5E, itemsize=4)
+    return dataclasses.replace(plan, **overrides) if overrides else plan
+
+
+def nhwc_plan(**overrides) -> collapse.CollapsePlan:
+    plan = collapse.collapse(nhwc_program(), NHWC_SHAPES,
+                             resource.TPU_V5E, itemsize=4)
+    return dataclasses.replace(plan, **overrides) if overrides else plan
+
+
+def corrupt(obj, **fields):
+    """Bypass frozen-dataclass validation: mutate in place, post-hoc —
+    exactly the kind of drift the verifier exists to catch."""
+    for k, v in fields.items():
+        object.__setattr__(obj, k, v)
+    return obj
+
+
+def swiglu_kernel_op(**attr_overrides) -> ir.OpNode:
+    attrs = {"kernel": "swiglu",
+             "slots": (("in", "gate"), ("in", "up")),
+             "arg_shapes": ((64, 128), (64, 128)),
+             "arg_dtypes": ("float32", "float32"),
+             "out_shape": (64, 128), "out_dtype": "float32",
+             "act": "silu"}
+    attrs.update(attr_overrides)
+    return ir.OpNode(ir.OpKind.KERNEL, "swiglu0", ("gate", "up"), "y",
+                     attrs=attrs)
+
+
+KERNEL_SHAPES = {"gate": (64, 128), "up": (64, 128), "y": (64, 128)}
+
+
+# ---------------------------------------------------------------------------
+# The mutant matrix: (id, expected invariant, findings builder).
+# ---------------------------------------------------------------------------
+
+def _m_def_before_use():
+    prog = rows_program()
+    corrupt(prog, ops=tuple(reversed(prog.ops)))
+    return verify.check_program(prog)
+
+
+def _m_redefinition():
+    prog = rows_program()
+    corrupt(prog.ops[1], output="a")            # clobbers act's output
+    return verify.check_program(prog)
+
+
+def _m_output_undefined():
+    prog = rows_program()
+    corrupt(prog, outputs=("ghost",))
+    return verify.check_program(prog)
+
+
+def _m_unknown_fn():
+    prog = rows_program()
+    corrupt(prog.ops[0], fn="frobnicate")
+    return verify.check_program(prog)
+
+
+def _m_program_shape_drift():
+    # recorded aval of the op output contradicts the op semantics
+    shapes = dict(ROWS_SHAPES, a=(64, 64), y=(64, 128))
+    return verify.check_program(rows_program(), shapes=shapes)
+
+
+def _m_program_dtype_drift():
+    shapes = dict(ROWS_SHAPES, a=(64, 128), y=(64, 128))
+    dtypes = {"gate": "float32", "up": "float32", "a": "bfloat16",
+              "y": "float32"}
+    return verify.check_program(rows_program(), shapes=shapes,
+                                dtypes=dtypes)
+
+
+def _m_graph_shape_drift():
+    graph = ir.NetGraph(
+        name="g", input="x", output="p",
+        ops=(ir.OpNode(ir.OpKind.POOL2D, "pool", ("x",), "p", fn="max",
+                       attrs={"window": (2, 2), "stride": (2, 2),
+                              "padding": (0, 0)}),))
+    # correct output shape is (1, 8, 8, 8): the recorded aval lies
+    shapes = {"x": (1, 16, 16, 8), "p": (1, 16, 16, 8)}
+    return verify.check_graph(graph, shapes=shapes)
+
+
+def _m_partition_gap():
+    plan = rows_plan()
+    seq = plan.sequences[0]
+    corrupt(seq, steps=seq.steps[1:])           # first step vanishes
+    return verify.check_plan(plan, itemsize=4)
+
+
+def _m_partition_overlap():
+    plan = rows_plan()
+    seq = plan.sequences[0]
+    corrupt(seq, steps=seq.steps + seq.steps[:1])
+    return verify.check_plan(plan, itemsize=4)
+
+
+def _m_budget_exceeded():
+    plan = rows_plan(device=resource.TINY_DEVICE)
+    corrupt(plan.sequences[0], tile_rows=1 << 16)
+    return verify.check_plan(plan, itemsize=4)
+
+
+def _m_tile_not_positive():
+    plan = rows_plan()
+    corrupt(plan.sequences[0], tile_rows=-8)
+    return verify.check_plan(plan, itemsize=4)
+
+
+def _m_halo_mismatch():
+    prog = nhwc_program()
+    image_hw = [(16, 16), (16, 16), (16, 16), (16, 16)]
+    levels = list(nhwc._plan_levels(prog.ops, 8, 8, image_hw))
+    # shift the input level's halo origin by one: every tile now loads a
+    # window displaced from its true receptive field
+    levels[0] = dataclasses.replace(levels[0], off_h=levels[0].off_h + 1)
+    return verify.check_nhwc_levels(prog, levels, 8, 8, image_hw)
+
+
+def _m_missing_vjp():
+    prog = rows_program()
+    corrupt(prog.ops[0], fn="frobnicate")       # no derivative table entry
+    return verify.check_differentiable(prog)
+
+
+def _m_write_race():
+    return verify.check_write_spec(verify.WriteSpec(
+        name="race", grid=(4,), block_shape=(8, 128),
+        index_map=lambda i: (0, 0), array_shape=(32, 128)))
+
+
+def _m_write_out_of_bounds():
+    return verify.check_write_spec(verify.WriteSpec(
+        name="oob", grid=(4,), block_shape=(8, 128),
+        index_map=lambda i: (i + 1, 0), array_shape=(32, 128)))
+
+
+def _m_bad_accumulator():
+    # claims the grid-sum idiom but addresses a different block per cell
+    return verify.check_write_spec(verify.WriteSpec(
+        name="acc", grid=(4,), block_shape=(8, 128),
+        index_map=lambda i: (i, 0), array_shape=(32, 128),
+        accumulate="grid-sum"))
+
+
+def _m_unknown_kernel():
+    return verify.check_kernel_op(swiglu_kernel_op(kernel="nonexistent"))
+
+
+def _m_slots_mismatch():
+    op = swiglu_kernel_op(slots=(("in", "gate"), ("in", "wrong")))
+    return verify.check_kernel_op(op)
+
+
+def _m_kernel_aval_mismatch():
+    op = swiglu_kernel_op()
+    return verify.check_kernel_op(op, shapes=dict(KERNEL_SHAPES,
+                                                  gate=(64, 256)))
+
+
+def _m_kernel_out_contract():
+    # out_shape violates the swiglu contract (out == arg_shapes[0])
+    op = swiglu_kernel_op(out_shape=(64, 256))
+    return verify.check_kernel_op(op)
+
+
+def _m_kernel_no_vjp(monkeypatch):
+    entry = dataclasses.replace(registry_mod.REGISTRY["swiglu"], vjp=None)
+    monkeypatch.setitem(registry_mod.REGISTRY, "swiglu", entry)
+    return verify.check_kernel_op(swiglu_kernel_op(), differentiable=True)
+
+
+MUTANTS = [
+    # family 1: graph/program well-formedness
+    ("program-def-before-use", "program.def-before-use",
+     _m_def_before_use),
+    ("program-redefinition", "program.redefinition", _m_redefinition),
+    ("program-output-undefined", "program.output-undefined",
+     _m_output_undefined),
+    ("program-unknown-fn", "program.unknown-fn", _m_unknown_fn),
+    ("program-shape-drift", "program.shape-mismatch",
+     _m_program_shape_drift),
+    ("program-dtype-drift", "program.dtype-mismatch",
+     _m_program_dtype_drift),
+    ("graph-shape-drift", "graph.shape-mismatch", _m_graph_shape_drift),
+    # family 2: CollapsePlan legality
+    ("plan-partition-gap", "plan.partition-gap", _m_partition_gap),
+    ("plan-partition-overlap", "plan.partition-overlap",
+     _m_partition_overlap),
+    ("plan-budget-exceeded", "plan.budget-exceeded", _m_budget_exceeded),
+    ("plan-tile-not-positive", "plan.tile-coverage", _m_tile_not_positive),
+    ("plan-halo-mismatch", "plan.halo-mismatch", _m_halo_mismatch),
+    ("plan-missing-vjp", "plan.missing-vjp", _m_missing_vjp),
+    # family 3: pallas grid write model
+    ("grid-write-race", "grid.write-race", _m_write_race),
+    ("grid-out-of-bounds", "grid.out-of-bounds", _m_write_out_of_bounds),
+    ("grid-bad-accumulator", "grid.accumulator", _m_bad_accumulator),
+    # family 4: registry rewrite soundness
+    ("kernel-unknown", "kernel.unknown", _m_unknown_kernel),
+    ("kernel-slots-mismatch", "kernel.slots-mismatch", _m_slots_mismatch),
+    ("kernel-aval-mismatch", "kernel.aval-mismatch",
+     _m_kernel_aval_mismatch),
+    ("kernel-out-contract", "kernel.aval-mismatch", _m_kernel_out_contract),
+    ("kernel-no-vjp", "kernel.no-vjp", _m_kernel_no_vjp),
+]
+
+
+def _run_mutant(builder, monkeypatch):
+    if builder is _m_kernel_no_vjp:
+        return builder(monkeypatch)
+    return builder()
+
+
+class TestMutants:
+    """Every injected corruption is caught under the named invariant and
+    follows the strict/warn/off policy."""
+
+    @pytest.mark.parametrize("mid,invariant,builder",
+                             MUTANTS, ids=[m[0] for m in MUTANTS])
+    def test_caught_with_named_invariant(self, mid, invariant, builder,
+                                         monkeypatch):
+        findings = _run_mutant(builder, monkeypatch)
+        errs = verify.errors(findings)
+        assert errs, f"mutant {mid} produced no error finding"
+        assert any(f.invariant == invariant for f in errs), \
+            f"mutant {mid}: wanted {invariant}, got " \
+            f"{[f.invariant for f in errs]}"
+        # every error finding names a registered invariant + source module
+        for f in errs:
+            assert f.invariant in verify.INVARIANTS
+            assert f.source == verify.INVARIANTS[f.invariant][0]
+
+    @pytest.mark.parametrize("mid,invariant,builder",
+                             MUTANTS, ids=[m[0] for m in MUTANTS])
+    def test_strict_raises(self, mid, invariant, builder, monkeypatch):
+        findings = _run_mutant(builder, monkeypatch)
+        with pytest.raises(verify.VerifyError) as e:
+            verify.enforce(findings, "strict")
+        assert invariant in {f.invariant for f in e.value.findings}
+        assert invariant in str(e.value)        # names the first violation
+
+    @pytest.mark.parametrize("mid,invariant,builder",
+                             MUTANTS, ids=[m[0] for m in MUTANTS])
+    def test_warn_warns(self, mid, invariant, builder, monkeypatch):
+        findings = _run_mutant(builder, monkeypatch)
+        with pytest.warns(UserWarning, match="repro.verify"):
+            verify.enforce(findings, "warn")
+
+    @pytest.mark.parametrize("mid,invariant,builder",
+                             MUTANTS, ids=[m[0] for m in MUTANTS])
+    def test_off_is_silent(self, mid, invariant, builder, monkeypatch):
+        findings = _run_mutant(builder, monkeypatch)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            verify.enforce(findings, "off")     # no raise, no warning
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError, match="unknown verify mode"):
+            verify.enforce([], "bogus")
+
+
+# ---------------------------------------------------------------------------
+# Clean pass: every shipped architecture verifies with zero errors.
+# ---------------------------------------------------------------------------
+
+class TestCleanPass:
+    @pytest.mark.parametrize("arch", [*ARCH_IDS, "brainslug-cnn"])
+    def test_arch_verifies_clean(self, arch):
+        findings = lint.lint_arch(arch, resource.TPU_V5E, rows=256)
+        assert verify.errors(findings) == [], \
+            [str(f) for f in verify.errors(findings)]
+
+    def test_valid_plans_produce_no_findings(self):
+        assert verify.errors(verify.check_plan(rows_plan(), itemsize=4)) \
+            == []
+        assert verify.errors(verify.check_plan(nhwc_plan(), itemsize=4)) \
+            == []
+
+    def test_valid_write_models_prove_disjoint(self):
+        for differentiable in (False, True):
+            plan = collapse.collapse(nhwc_program(), NHWC_SHAPES,
+                                     resource.TPU_V5E, itemsize=4,
+                                     differentiable=differentiable)
+            specs = verify.plan_write_specs(plan,
+                                            differentiable=differentiable)
+            assert specs                        # the model covers the kernels
+            for spec in specs:
+                assert verify.errors(verify.check_write_spec(spec)) == []
+
+    def test_grid_enumeration_cap_is_a_warning(self):
+        spec = verify.WriteSpec(
+            name="big", grid=(1 << 20,), block_shape=(8, 128),
+            index_map=lambda i: (i, 0), array_shape=(8 << 20, 128))
+        findings = verify.check_write_spec(spec)
+        assert verify.errors(findings) == []
+        assert any("enumeration cap" in f.detail for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline wiring: compile_stacks gates on the configured mode.
+# ---------------------------------------------------------------------------
+
+def _kernel_segment_with_drift():
+    """A KERNEL segment whose recorded avals drifted from the traced ones —
+    codegen compiles it happily; only the verifier notices."""
+    op = swiglu_kernel_op(arg_shapes=((64, 64), (64, 128)),
+                          out_shape=(64, 64))
+    return [analyzer.Segment(op=op)], dict(KERNEL_SHAPES)
+
+
+class TestPipelineGate:
+    def test_strict_raises_before_codegen(self):
+        segments, shapes = _kernel_segment_with_drift()
+        cfg = core_api.OptimizeConfig(verify="strict")
+        with pytest.raises(verify.VerifyError) as e:
+            core_api.compile_stacks(segments, shapes, cfg)
+        assert "kernel.aval-mismatch" in str(e.value)
+
+    def test_warn_records_findings_and_compiles(self):
+        segments, shapes = _kernel_segment_with_drift()
+        cfg = core_api.OptimizeConfig(verify="warn")
+        with pytest.warns(UserWarning, match="repro.verify"):
+            executors, _, _, _, findings = core_api.compile_stacks(
+                segments, shapes, cfg)
+        assert 0 in executors                   # compile still succeeded
+        assert any(f.invariant == "kernel.aval-mismatch" for f in findings)
+
+    def test_off_skips_the_pass_entirely(self, monkeypatch):
+        segments, shapes = _kernel_segment_with_drift()
+
+        def boom(*a, **k):                      # pragma: no cover
+            raise AssertionError("verify ran under verify='off'")
+
+        monkeypatch.setattr(verify, "verify_segments", boom)
+        cfg = core_api.OptimizeConfig(verify="off")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            executors, _, _, _, findings = core_api.compile_stacks(
+                segments, shapes, cfg)
+        assert 0 in executors
+        assert findings == ()
+
+    def test_config_rejects_unknown_verify_mode(self):
+        with pytest.raises(ValueError, match="verify"):
+            core_api.OptimizeConfig(verify="bogus")
+
+    def test_unknown_kernel_is_verify_error_not_keyerror(self):
+        op = swiglu_kernel_op(kernel="nonexistent")
+        with pytest.raises(verify.VerifyError) as e:
+            codegen.compile_kernel_op(op, mode="xla")
+        assert "kernel.unknown" in str(e.value)
+        assert e.value.findings[0].subject == "swiglu0"
+
+
+# ---------------------------------------------------------------------------
+# Traced-frontend wiring: dead-value pruning + report() re-emission.
+# ---------------------------------------------------------------------------
+
+class TestTracedFrontend:
+    def test_trace_prunes_dead_values(self):
+        def f(x):
+            dead = jnp.exp(x) * 3.0            # computed, never used
+            del dead
+            return jnp.tanh(x) + 1.0
+
+        tr = trace_mod.trace(f, jnp.ones((8, 16), jnp.float32))
+        keep = {ref for kind, ref in tr.out_refs if kind == "env"}
+        consumed = {v for op in tr.graph.ops for v in op.inputs}
+        for op in tr.graph.ops:
+            assert op.output in consumed | keep, \
+                f"dead op {op.name} survived trace()"
+        # the verifier's dead-value check is the regression guard
+        assert not [f_ for f_ in verify.verify_trace(tr)
+                    if f_.invariant == "graph.dead-value"]
+
+    def test_check_graph_flags_dead_value(self):
+        graph = ir.NetGraph(
+            name="g", input="x", output="y",
+            ops=(ir.OpNode(ir.OpKind.EW_UNARY, "dead", ("x",), "d",
+                           fn="exp"),
+                 ir.OpNode(ir.OpKind.EW_UNARY, "live", ("x",), "y",
+                           fn="tanh")))
+        findings = verify.check_graph(graph)
+        dead = [f for f in findings if f.invariant == "graph.dead-value"]
+        assert len(dead) == 1 and dead[0].severity == "warning"
+        assert "'d'" in dead[0].detail
+
+    def test_optimize_clean_records_no_findings(self):
+        def f(x):
+            return jnp.tanh(x) + 1.0
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", UserWarning)
+            net = api.optimize(f, jnp.ones((8, 16), jnp.float32),
+                               config=api.OptimizeConfig(verify="strict"))
+        assert verify.errors(net.verify_findings) == []
+        assert net.report().verify_errors == 0
+
+    def test_report_reemits_waived_findings(self):
+        def f(x):
+            return jnp.tanh(x) + 1.0
+
+        net = api.optimize(f, jnp.ones((8, 16), jnp.float32),
+                           config=api.OptimizeConfig(verify="warn"))
+        # inject a waived finding post-hoc: report() must re-emit it long
+        # after the compile-time warning scrolled away
+        net.verify_findings = (verify.Finding(
+            "plan.budget-exceeded", "error", "glu/seq0", "over budget"),)
+        rep = net.report()
+        assert rep.verify_errors == 1
+        text = str(rep)
+        assert "plan.budget-exceeded" in text and "glu/seq0" in text
+
+    def test_optimized_graph_records_findings(self):
+        graph = ir.NetGraph(
+            name="g", input="x", output="y",
+            ops=(ir.OpNode(ir.OpKind.EW_UNARY, "t", ("x",), "y",
+                           fn="tanh"),))
+        net = core_api.optimize_graph(
+            graph, (8, 128), core_api.OptimizeConfig(verify="strict"),
+            layout="rows")
+        assert net.verify_findings == ()
+        assert net.report().verify_errors == 0
