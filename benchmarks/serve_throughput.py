@@ -7,12 +7,23 @@ served twice over the same params:
   ``Server.generate`` loop.  Prompts are right-padded to the batch max and
   every batch decodes until its longest request stops, so short requests
   cycle pad tokens (the breadth-first waste the engine removes).
-* **engine** — ``Engine.run`` over ``slots`` cache rows with queue
-  admission and the single jitted mixed prefill/decode step.
+* **engine-dense** — ``Engine.run`` over ``slots`` dense cache rows with
+  queue admission and the single jitted mixed prefill/decode step.
+* **engine-paged** — the same engine over the block-mapped KV pool
+  (``kv_layout="paged"``) with prefix sharing: requests drawn from the
+  shared-prefix traffic mix map the same immutable prompt blocks instead
+  of re-prefilling them.
+
+The queue is ragged (mixed prompt tails, mixed stop lengths) with a
+configurable shared-prefix fraction.  The paged and dense engines must
+produce token-identical greedy completions — ``run()`` raises on any
+divergence, which is the CI parity gate.
 
 Writes ``results/bench/serve_throughput.json`` (one row per driver, in the
-same artifact style as fig10/table2): wall time, generated tokens/s,
-dispatch counts, decode slot-step work and slot utilization.
+same artifact style as fig10/table2): wall time, generated tokens/s, p50 /
+p99 request latency, dispatch counts, decode slot-step work, slot
+utilization, and the paged-KV counters (``kv_block_utilization``,
+``prefix_hit_tokens``, ``cow_forks``, peak ``blocks_in_use``).
 
   PYTHONPATH=src:. python -m benchmarks.serve_throughput --quick
 """
@@ -31,22 +42,34 @@ from repro.launch.serve import ServeConfig, Server
 
 # CI smoke configuration — single source of truth for `--quick` here and
 # for `benchmarks.run serve --quick`
-QUICK_KWARGS = dict(n_requests=5, slots=2, new_tokens=6,
+QUICK_KWARGS = dict(n_requests=6, slots=2, new_tokens=6,
                     prompt_lens=(2, 5, 3), arch="deepseek-7b",
-                    prefill_chunk=4)
+                    prefill_chunk=4, prefix_lens=(6,), prefix_frac=0.5,
+                    kv_block_size=4)
 
 
 def make_queue(vocab: int, n_requests: int, prompt_lens: tuple[int, ...],
-               new_tokens: int, seed: int = 0) -> list[Request]:
-    """Ragged traffic: prompt lengths cycle through ``prompt_lens``, stop
-    lengths are uniform in [1, new_tokens]."""
+               new_tokens: int, seed: int = 0,
+               prefix_lens: tuple[int, ...] = (),
+               prefix_frac: float = 0.0) -> list[Request]:
+    """Ragged traffic: tail lengths cycle through ``prompt_lens``, stop
+    lengths are uniform in [1, new_tokens].  With ``prefix_frac > 0`` that
+    fraction of requests prepend one of ``len(prefix_lens)`` shared token
+    prefixes (drawn round-robin) — the traffic shape prefix sharing
+    exploits (system prompts, few-shot headers)."""
     rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab, (p,)).astype(np.int32)
+                for p in prefix_lens]
     reqs = []
     for i in range(n_requests):
         p = prompt_lens[i % len(prompt_lens)]
+        tail = rng.integers(0, vocab, (p,)).astype(np.int32)
+        if prefixes and rng.random() < prefix_frac:
+            prompt = np.concatenate([prefixes[i % len(prefixes)], tail])
+        else:
+            prompt = tail
         reqs.append(Request(
-            request_id=i,
-            prompt=rng.integers(0, vocab, (p,)).astype(np.int32),
+            request_id=i, prompt=prompt,
             max_new_tokens=int(rng.integers(1, new_tokens + 1))))
     return reqs
 
@@ -103,64 +126,102 @@ def run_static(server: Server, reqs: list[Request]) -> dict:
     return d
 
 
-def run(n_requests: int = 16, slots: int = 4, new_tokens: int = 8,
-        prompt_lens: tuple[int, ...] = (2, 6, 12, 4), arch: str = "qwen2.5-14b",
-        mode: str = "xla", prefill_chunk: int = 4,
+def run(n_requests: int = 2000, slots: int = 4, new_tokens: int = 8,
+        prompt_lens: tuple[int, ...] = (2, 6, 12, 4),
+        arch: str = "qwen2.5-14b", mode: str = "xla",
+        prefill_chunk: int = 4, prefix_lens: tuple[int, ...] = (8, 12),
+        prefix_frac: float = 0.5, kv_block_size: int = 4,
+        kv_num_blocks: int | None = None,
         out_path: str = "results/bench/serve_throughput.json") -> list[dict]:
-    max_prompt = max(prompt_lens)
+    max_prompt = max(prompt_lens) + max(prefix_lens or (0,))
     sc = ServeConfig(arch=arch, mode=mode, batch=slots,
                      prompt_len=max_prompt, new_tokens=new_tokens,
                      max_len=max_prompt + new_tokens + 1)
     server = Server(sc)
     reqs = make_queue(server.cfg.vocab_size, n_requests, prompt_lens,
-                      new_tokens)
+                      new_tokens, prefix_lens=prefix_lens,
+                      prefix_frac=prefix_frac)
     print(f"[serve_throughput] arch={arch} mode={mode} slots={slots} "
-          f"requests={n_requests} prompts={prompt_lens} "
-          f"stops<= {new_tokens}")
+          f"requests={n_requests} tails={prompt_lens} "
+          f"prefixes={prefix_lens}@{prefix_frac} stops<= {new_tokens}")
 
     static = run_static(server, reqs)
 
-    engine = server.engine(slots=slots, prefill_chunk=prefill_chunk)
-    engine.run(reqs)
-    eng = engine.last_stats.as_dict()
-    eng["dispatch_delta"] = dict(engine.last_dispatch or {})
+    def fresh_engine(layout: str):
+        return server.engine(slots=slots, prefill_chunk=prefill_chunk,
+                             kv_layout=layout, kv_block_size=kv_block_size,
+                             kv_num_blocks=kv_num_blocks)
+
+    engine_d = fresh_engine("dense")
+    out_dense = engine_d.run(reqs)
+    dense = engine_d.last_stats.as_dict()
+    dense["dispatch_delta"] = dict(engine_d.last_dispatch or {})
+
+    engine_p = fresh_engine("paged")
+    out_paged = engine_p.run(reqs)
+    paged = engine_p.last_stats.as_dict()
+    paged["dispatch_delta"] = dict(engine_p.last_dispatch or {})
+
+    # parity gate: the paged layout is a memory-system refactor, not a
+    # model change — greedy completions must be token-identical to dense
+    # on the same queue, or the benchmark (and the CI smoke that runs it)
+    # fails loudly
+    diverged = [a.request_id for a, b in zip(out_dense, out_paged)
+                if a.status != b.status
+                or not np.array_equal(a.tokens, b.tokens)]
+    if diverged:
+        raise RuntimeError(
+            f"paged/dense parity violation: request ids {diverged[:10]} "
+            f"({len(diverged)} of {len(reqs)}) diverged")
 
     # never-slower driver decision: serve the same queue once more under
     # each driver through the autotuner (single repeat — these are whole
     # serving runs, not kernels) and record which one it would commit.
-    # The engine closure builds a fresh engine so repeated measurement
+    # The engine closures build fresh engines so repeated measurement
     # never reuses slot state.
     def _drive_static():
         return run_static(server, reqs)["wall_s"]
 
-    def _drive_engine():
-        e = server.engine(slots=slots, prefill_chunk=prefill_chunk)
+    def _drive_engine(layout):
+        e = fresh_engine(layout)
         e.run(reqs)
         return e.last_stats.wall_s
 
     tuned = common.autotune_pick(
         f"serve/{arch}/{mode}/slots{slots}/req{n_requests}",
-        {"static": _drive_static, "engine": _drive_engine}, (),
-        baseline="static", requested="engine", repeats=1, warmup=0)
+        {"static": _drive_static,
+         "engine-dense": lambda: _drive_engine("dense"),
+         "engine-paged": lambda: _drive_engine("paged")}, (),
+        baseline="static", requested="engine-paged", repeats=1, warmup=0)
 
     rows = []
-    for driver, d in (("static", static), ("engine", eng)):
+    for driver, d in (("static", static), ("engine-dense", dense),
+                      ("engine-paged", paged)):
         # explicit keys last: the static driver's ServeStats counts the
         # padded filler rows of a partial last batch as requests (it really
         # does dispatch them) — the row header reports the true queue size
         row = {**d, "driver": driver, "arch": arch, "mode": mode,
                "slots": slots, "n_requests": n_requests,
                "new_tokens_max": new_tokens,
-               "prompt_lens": list(prompt_lens), **tuned}
+               "prompt_lens": list(prompt_lens),
+               "prefix_lens": list(prefix_lens),
+               "prefix_frac": prefix_frac,
+               "kv_block_size": kv_block_size,
+               "parity_ok": True, **tuned}
         rows.append(row)
-        print(f"  {driver:7s}: {d['generated_tokens']} tokens in "
+        print(f"  {driver:12s}: {d['generated_tokens']} tokens in "
               f"{d['wall_s']:.2f}s ({d['generated_tokens_per_s']:.1f} tok/s), "
               f"{d['step_dispatches']} dispatches, "
-              f"{d['decode_slot_steps']} decode slot-steps, "
+              f"p50/p99 {d['p50_latency_ms']:.0f}/{d['p99_latency_ms']:.0f}ms, "
               f"util {d['slot_utilization']:.2f}")
-    speedup = (static["wall_s"] / eng["wall_s"]) if eng["wall_s"] else 0.0
-    waste = static["decode_slot_steps"] - eng["decode_slot_steps"]
-    print(f"  engine removes {waste} padded decode slot-steps; "
+    speedup = (static["wall_s"] / paged["wall_s"]) if paged["wall_s"] else 0.0
+    waste = static["decode_slot_steps"] - paged["decode_slot_steps"]
+    print(f"  paged engine removes {waste} padded decode slot-steps; "
+          f"prefill drops {dense['prefill_tokens']} -> "
+          f"{paged['prefill_tokens']} tokens "
+          f"(prefix hits {paged['prefix_hit_tokens']}, "
+          f"cow forks {paged['cow_forks']}, "
+          f"kv util {paged['kv_block_utilization']:.2f}); "
           f"wall speedup {speedup:.2f}x; autotune commits "
           f"{tuned['chosen_variant']}"
           f"{' (GUARDRAIL)' if tuned['guardrail_trips'] else ''}")
@@ -174,17 +235,26 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="qwen2.5-14b")
     ap.add_argument("--mode", default="xla",
                     choices=["brainslug", "xla", "barrier"])
-    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=2000)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--prefix-frac", type=float, default=0.5,
+                    help="fraction of requests drawing a shared prefix")
+    ap.add_argument("--kv-block-size", type=int, default=4)
+    ap.add_argument("--kv-num-blocks", type=int, default=None,
+                    help="paged pool size (default: slots * max_blocks)")
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: tiny arch, 2 slots, 5 ragged requests")
+                    help="CI smoke: tiny arch, 2 slots, 6 ragged requests "
+                         "with a shared-prefix mix")
     args = ap.parse_args(argv)
     if args.quick:
         run(**QUICK_KWARGS)
     else:
         run(n_requests=args.requests, slots=args.slots,
-            new_tokens=args.new_tokens, arch=args.arch, mode=args.mode)
+            new_tokens=args.new_tokens, arch=args.arch, mode=args.mode,
+            prefix_frac=args.prefix_frac,
+            kv_block_size=args.kv_block_size,
+            kv_num_blocks=args.kv_num_blocks)
     return 0
 
 

@@ -153,6 +153,13 @@ class RuntimeConfig:
     mode: str = "xla"                  # 'brainslug' | 'xla' | 'barrier'
     interpret: bool = True             # Pallas interpret (CPU)
     remat: str = "none"                # 'none' | 'dots' | 'full'
+    # --- serving KV-cache layout ------------------------------------------
+    # 'dense'  — every batch slot reserves max_len contiguous KV columns
+    # 'paged'  — a fixed pool of kv_block_size-token blocks addressed
+    #            through per-slot block tables (prefix sharing + COW); the
+    #            continuous-batching engine allocates blocks on demand
+    kv_layout: str = "dense"           # 'dense' | 'paged'
+    kv_block_size: int = 16            # tokens per KV block (paged layout)
     ssd_chunk: int = 64
     decode_block_k: int = 512
     attn_block_q: int = 128

@@ -64,6 +64,18 @@ class ServeStats:
     timed_out: int = 0              # requests whose queue wait exceeded
     # their deadline before a slot freed up
     wall_s: float = 0.0
+    # --- KV memory (paged layout; see launch/engine.py) -------------------
+    kv_block_utilization: float = 0.0  # time-averaged stored-token fraction
+    # of the mapped KV blocks (dense layout reports the live-column
+    # fraction of its slots x max_len reservation instead)
+    prefix_hit_tokens: int = 0      # prompt tokens served from shared
+    # prefix blocks instead of being prefilled again
+    blocks_in_use: int = 0          # peak pool blocks simultaneously mapped
+    cow_forks: int = 0              # copy-on-write block forks (a shared
+    # block was about to be written and was copied first)
+    # --- request latency (queue wait + service, ok completions) -----------
+    p50_latency_ms: float = 0.0
+    p99_latency_ms: float = 0.0
 
     @property
     def total_tokens(self) -> int:

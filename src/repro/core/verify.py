@@ -146,6 +146,25 @@ INVARIANTS: dict[str, tuple[str, str]] = {
         "src/repro/core/registry.py",
         "a KERNEL op in a differentiable net declares where its VJP "
         "comes from"),
+    "kv.block-out-of-bounds": (
+        "src/repro/launch/engine.py",
+        "every block id a slot table, the free list or the prefix cache "
+        "holds lies inside the physical pool"),
+    "kv.length-uncovered": (
+        "src/repro/launch/engine.py",
+        "every slot's mapped blocks cover its logical KV length"),
+    "kv.refcount-mismatch": (
+        "src/repro/launch/engine.py",
+        "every block's refcount equals the number of slot tables mapping "
+        "it plus its prefix-cache reference, and free blocks hold none"),
+    "kv.shared-writable": (
+        "src/repro/launch/engine.py",
+        "no block a dispatch is about to write is mapped by more than one "
+        "owner (copy-on-write must have forked it first)"),
+    "kv.freed-reachable": (
+        "src/repro/launch/engine.py",
+        "no block on the free list is still reachable from a slot table "
+        "or the prefix cache"),
 }
 
 
@@ -1079,3 +1098,107 @@ def verify_trace(tr: Any) -> list[Finding]:
     keep = {ref for kind, ref in tr.out_refs if kind == "env"}
     return check_graph(tr.graph, shapes=tr.shapes, dtypes=tr.dtypes,
                        keep=keep)
+
+
+# ---------------------------------------------------------------------------
+# (5) Serving block-table soundness (``kv.*``).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockTableState:
+    """Snapshot of the serve engine's paged-KV bookkeeping at one scheduler
+    tick, in plain tuples so the checker re-derives soundness independently
+    of the allocator that produced it.
+
+    ``tables``/``lengths`` are per *live slot* (one row each); ``cached``
+    is the set of blocks the prefix cache holds a reference to; ``writers``
+    is the set of physical blocks the imminent dispatch will write into.
+    """
+
+    num_blocks: int
+    block_size: int
+    refcounts: tuple[int, ...]          # per physical block
+    free: tuple[int, ...]               # allocator free list
+    tables: tuple[tuple[int, ...], ...]  # live slots' mapped blocks
+    lengths: tuple[int, ...]            # live slots' logical KV lengths
+    cached: tuple[int, ...] = ()
+    writers: tuple[int, ...] = ()
+
+
+def check_block_tables(state: BlockTableState) -> list[Finding]:
+    """Block-table soundness for the paged serving cache: in-bounds ids,
+    length coverage, refcounts re-derived from the mapping tables and the
+    prefix cache, copy-on-write discipline for the blocks about to be
+    written, and free-list unreachability."""
+    fs: list[Finding] = []
+    n, bs = state.num_blocks, state.block_size
+
+    def in_bounds(b: int) -> bool:
+        return 0 <= b < n
+
+    for where, ids in (("free list", state.free),
+                       ("prefix cache", state.cached),
+                       ("write set", state.writers)):
+        for b in ids:
+            if not in_bounds(b):
+                fs.append(Finding(
+                    "kv.block-out-of-bounds", "error", where,
+                    f"block id {b} outside the {n}-block pool"))
+
+    derived = [0] * n
+    cached = set(state.cached)
+    for b in cached:
+        if in_bounds(b):
+            derived[b] += 1
+    for s_i, (row, length) in enumerate(zip(state.tables, state.lengths)):
+        subj = f"slot[{s_i}]"
+        for b in row:
+            if not in_bounds(b):
+                fs.append(Finding(
+                    "kv.block-out-of-bounds", "error", subj,
+                    f"mapped block id {b} outside the {n}-block pool"))
+            else:
+                derived[b] += 1
+        if len(row) * bs < length:
+            fs.append(Finding(
+                "kv.length-uncovered", "error", subj,
+                f"{len(row)} mapped blocks of {bs} tokens cover "
+                f"{len(row) * bs} positions < logical length {length}"))
+
+    if len(state.refcounts) != n:
+        fs.append(Finding(
+            "kv.refcount-mismatch", "error", "allocator",
+            f"{len(state.refcounts)} refcounts recorded for a {n}-block "
+            f"pool"))
+        return fs
+    free = set(state.free)
+    for b in range(n):
+        want = derived[b]
+        got = state.refcounts[b]
+        if b in free:
+            if want:
+                continue            # reported as kv.freed-reachable below
+            if got != 0:
+                fs.append(Finding(
+                    "kv.refcount-mismatch", "error", f"block[{b}]",
+                    f"free block carries refcount {got}"))
+        elif got != want:
+            fs.append(Finding(
+                "kv.refcount-mismatch", "error", f"block[{b}]",
+                f"recorded refcount {got} != {want} derived from "
+                f"{derived[b]} table/cache reference(s)"))
+
+    for b in state.writers:
+        if in_bounds(b) and derived[b] > 1:
+            fs.append(Finding(
+                "kv.shared-writable", "error", f"block[{b}]",
+                f"dispatch writes a block held by {derived[b]} owners; "
+                f"copy-on-write must fork before the write"))
+
+    for b in free:
+        if in_bounds(b) and derived[b] > 0:
+            fs.append(Finding(
+                "kv.freed-reachable", "error", f"block[{b}]",
+                f"freed block still reachable from {derived[b]} "
+                f"table/cache reference(s)"))
+    return fs

@@ -68,6 +68,112 @@ def _kernel(scale: float, block_k: int,
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_kernel(scale: float, block_size: int,
+                  tbl_ref, q_ref, k_ref, v_ref, len_ref, o_ref,
+                  m_ref, l_ref, acc_ref) -> None:
+    """Same online-softmax body as ``_kernel``; the KV tile for grid step
+    ``j`` is whatever physical block the scalar-prefetched table routed in
+    (see ``paged_flash_decode``'s BlockSpec index maps), and the masking
+    index is the *logical* position ``j * block_size + lane``."""
+    del tbl_ref                 # consumed by the BlockSpec index maps
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bs, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_idx = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_idx < len_ref[0, 0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        # same lengths==0 convention as the dense kernel: m still at its
+        # NEG_INF seed <=> the slot attended over zero keys -> exact zeros
+        valid = m_ref[...] > NEG_INF * 0.5
+        acc = jnp.where(valid, acc_ref[...], 0.0)
+        o_ref[0, 0] = (acc /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
+                       v_pool: jnp.ndarray, table: jnp.ndarray,
+                       lengths: jnp.ndarray, *, scale: float | None = None,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Flash decode through a block table: one query position against a
+    block-mapped KV pool.
+
+    q: (B, H, 1, D); k_pool/v_pool: (N, G, block_size, D) physical blocks;
+    table: (B, MB) int32 — slot ``b``'s logical block ``j`` lives in
+    physical block ``table[b, j]``; lengths: (B,) int32 valid positions.
+
+    The table rides in as a scalar-prefetch operand
+    (``PrefetchScalarGridSpec``) so the KV BlockSpec index maps can gather
+    ``pool[table[b, j]]`` per grid step — the kernel body never sees a
+    pointer, it streams exactly the same ``(block, d)`` tiles the dense
+    kernel would, just from pool rows instead of contiguous columns.  The
+    tile width is the allocator's block size, so the depth-first working
+    set per step is one block per head.  Unmapped table entries (the tail
+    past ``ceil(length / block_size)``) may alias any pool block; their
+    logical positions are ``>= length`` and masked to NEG_INF before they
+    touch the softmax state.
+    """
+    b, h, _one, d = q.shape
+    n, g, bs, _ = k_pool.shape
+    mb = table.shape[1]
+    rep = h // g
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    lens = lengths.reshape(b, 1).astype(jnp.int32)
+    table = table.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, j, tbl: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, j, tbl, rep=rep:
+                         (tbl[b_, j], h_ // rep, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, j, tbl, rep=rep:
+                         (tbl[b_, j], h_ // rep, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, j, tbl: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda b_, h_, j, tbl: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale, bs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(table, q, k_pool, v_pool, lens)
+    return out
+
+
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  lengths: jnp.ndarray, *, scale: float | None = None,
                  block_k: int = 512, interpret: bool = True) -> jnp.ndarray:

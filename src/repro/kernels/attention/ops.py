@@ -44,3 +44,12 @@ def flash_decode(q, k, v, lengths, *, block_k: int = 512,
     """Inference-only (no vjp needed on the decode path)."""
     return decode_mod.flash_decode(q, k, v, lengths, block_k=block_k,
                                    interpret=interpret)
+
+
+def paged_flash_decode(q, k_pool, v_pool, table, lengths, *,
+                       interpret: bool = True):
+    """Block-mapped flash decode (inference-only, like ``flash_decode``):
+    the (B, MB) block table routes each grid step to its physical pool
+    block via scalar prefetch."""
+    return decode_mod.paged_flash_decode(q, k_pool, v_pool, table, lengths,
+                                         interpret=interpret)

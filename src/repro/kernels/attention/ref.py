@@ -54,3 +54,29 @@ def decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                lengths: jnp.ndarray, *, scale: float | None = None
                ) -> jnp.ndarray:
     return attention_ref(q, k, v, causal=False, scale=scale, lengths=lengths)
+
+
+def gather_paged(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the per-slot view of a paged KV pool.
+
+    pool: (N, G, bs, D) physical blocks; table: (B, MB) int32 block ids.
+    Returns (B, G, MB*bs, D) — position ``p`` of slot ``b`` reads
+    ``pool[table[b, p // bs], :, p % bs]``.  Unmapped table entries point
+    at whatever block id the host left there (conventionally 0); their
+    columns sit past the slot's ``length`` and are masked by the caller.
+    """
+    g = pool[table]                             # (B, MB, G, bs, D)
+    b, mb, gh, bs, d = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, gh, mb * bs, d)
+
+
+def paged_decode_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                     v_pool: jnp.ndarray, table: jnp.ndarray,
+                     lengths: jnp.ndarray, *, scale: float | None = None
+                     ) -> jnp.ndarray:
+    """Decode oracle over a block-mapped KV pool: gather the table view,
+    then the ordinary masked decode (same empty-softmax convention —
+    ``lengths == 0`` rows emit exact zeros)."""
+    k = gather_paged(k_pool, table)
+    v = gather_paged(v_pool, table)
+    return attention_ref(q, k, v, causal=False, scale=scale, lengths=lengths)

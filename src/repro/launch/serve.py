@@ -105,15 +105,33 @@ class Server:
         self._prefill = prefill_fn
 
     def engine(self, *, slots: int | None = None, prefill_chunk: int = 8,
-               seed: int | None = None) -> engine_mod.Engine:
+               seed: int | None = None, kv_layout: str | None = None,
+               kv_block_size: int | None = None,
+               kv_num_blocks: int | None = None,
+               prefix_sharing: bool = True,
+               verify_mode: str = "warn") -> engine_mod.Engine:
         """A continuous-batching :class:`~repro.launch.engine.Engine` over
         this server's params/config (``slots`` defaults to the static
-        batch width; the cache budget is the same ``max_len``)."""
+        batch width; the cache budget is the same ``max_len``).
+
+        ``kv_layout``/``kv_block_size`` override the runtime config's KV
+        cache layout for this engine (``"paged"`` swaps the dense per-slot
+        reservation for the block pool; see ``launch/engine.py``); the
+        remaining knobs pass through to the Engine."""
+        rt = self.rt
+        if kv_layout is not None or kv_block_size is not None:
+            rt = dataclasses.replace(
+                rt,
+                kv_layout=rt.kv_layout if kv_layout is None else kv_layout,
+                kv_block_size=(rt.kv_block_size if kv_block_size is None
+                               else kv_block_size))
         return engine_mod.Engine(
-            self.cfg, self.params, self.rt,
+            self.cfg, self.params, rt,
             slots=self.sc.batch if slots is None else slots,
             max_len=self.sc.max_len, prefill_chunk=prefill_chunk,
-            seed=self.sc.seed if seed is None else seed)
+            seed=self.sc.seed if seed is None else seed,
+            kv_num_blocks=kv_num_blocks, prefix_sharing=prefix_sharing,
+            verify_mode=verify_mode)
 
     def prefill(self, tokens: jnp.ndarray) -> tuple[Any, jnp.ndarray]:
         """Ingest the prompt (cache-building prefill) in a single jitted

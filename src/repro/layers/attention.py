@@ -214,8 +214,75 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         length=jnp.zeros((batch,), jnp.int32))
 
 
-def decode(params, x_t: jnp.ndarray, cache: KVCache, cfg: ModelConfig,
-           rt: RuntimeConfig, *, active: jnp.ndarray | None = None
+@dataclasses.dataclass
+class PagedKVCache:
+    """Block-mapped KV state: a fixed pool of ``(block_size,)``-token
+    physical blocks shared by every slot, addressed through a per-dispatch
+    block table.  The table itself is *not* cache state — it only changes
+    at host events (admission, on-demand append, copy-on-write fork), so
+    the engine threads it into each dispatch as an ordinary operand and
+    the jitted step stays table-shape-polymorphic over engine instances.
+    """
+    k_pool: jnp.ndarray     # (N, G, block_size, hd) physical blocks
+    v_pool: jnp.ndarray
+    length: jnp.ndarray     # (B,) int32 logical positions per slot
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int, dtype=jnp.bfloat16) -> PagedKVCache:
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    return PagedKVCache(
+        k_pool=jnp.zeros((num_blocks, g, block_size, hd), dtype),
+        v_pool=jnp.zeros((num_blocks, g, block_size, hd), dtype),
+        length=jnp.zeros((batch,), jnp.int32))
+
+
+def _decode_paged(params, x_t: jnp.ndarray, cache: PagedKVCache,
+                  cfg: ModelConfig, rt: RuntimeConfig,
+                  table: jnp.ndarray, active: jnp.ndarray | None
+                  ) -> tuple[jnp.ndarray, PagedKVCache]:
+    b = x_t.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    n, _, bs, _ = cache.k_pool.shape
+    q, k_new, v_new = _project(params, x_t, cfg)          # (B,*,1,hd)
+    pos = cache.length                                     # (B,)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k_new = rope(k_new, pos[:, None], cfg.rope_theta)
+
+    # Scatter write through the table: position `pos` lands in physical
+    # block table[b, pos // bs] at offset pos % bs.  The host pre-maps
+    # (and COW-forks) every block a dispatch will write, so the target is
+    # always private (refcount 1) — inactive slots are routed to the
+    # out-of-range id `n` and dropped.  Unlike the dense layout, a
+    # where-select over the pool is not expressible (the written row is
+    # per-slot dynamic), but the scatter touches one (G, hd) row per slot
+    # against a pool-sized operand, and with donation it stays in place.
+    phys = jnp.take_along_axis(table, (pos // bs)[:, None], axis=1)[:, 0]
+    if active is not None:
+        phys = jnp.where(active, phys, n)
+    off = pos % bs
+    k_pool = cache.k_pool.at[phys, :, off].set(
+        k_new[:, :, 0].astype(cache.k_pool.dtype), mode="drop")
+    v_pool = cache.v_pool.at[phys, :, off].set(
+        v_new[:, :, 0].astype(cache.v_pool.dtype), mode="drop")
+    adv = 1 if active is None else active.astype(jnp.int32)
+    lengths = cache.length + adv
+    new_cache = PagedKVCache(k_pool=k_pool, v_pool=v_pool, length=lengths)
+    if rt.mode == "brainslug":
+        o = attn_ops.paged_flash_decode(
+            q, k_pool.astype(q.dtype), v_pool.astype(q.dtype), table,
+            lengths, interpret=rt.interpret)
+    else:
+        o = attn_ref.paged_decode_ref(
+            q, k_pool.astype(q.dtype), v_pool.astype(q.dtype), table,
+            lengths)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
+    return jnp.einsum("bsk,kd->bsd", o, params["wo"]), new_cache
+
+
+def decode(params, x_t: jnp.ndarray, cache, cfg: ModelConfig,
+           rt: RuntimeConfig, *, active: jnp.ndarray | None = None,
+           block_table: jnp.ndarray | None = None
            ) -> tuple[jnp.ndarray, KVCache]:
     """One decode step.  x_t: (B, 1, D).
 
@@ -223,7 +290,17 @@ def decode(params, x_t: jnp.ndarray, cache: KVCache, cfg: ModelConfig,
     engine): inactive slots neither write their K/V into the cache nor
     advance their length — their cache state is frozen while other slots
     in the same dispatch prefill or decode.  ``None`` means all active.
+
+    A :class:`PagedKVCache` dispatches the block-mapped path and requires
+    ``block_table`` (the engine threads it per dispatch).
     """
+    if isinstance(cache, PagedKVCache):
+        if block_table is None:
+            raise ValueError(
+                "paged KV cache requires a block_table operand (the "
+                "engine threads it through lm.decode_step)")
+        return _decode_paged(params, x_t, cache, cfg, rt, block_table,
+                             active)
     b = x_t.shape[0]
     h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q, k_new, v_new = _project(params, x_t, cfg)          # (B,*,1,hd)
@@ -258,3 +335,5 @@ def decode(params, x_t: jnp.ndarray, cache: KVCache, cfg: ModelConfig,
 
 jax.tree_util.register_dataclass(
     KVCache, data_fields=["k", "v", "length"], meta_fields=[])
+jax.tree_util.register_dataclass(
+    PagedKVCache, data_fields=["k_pool", "v_pool", "length"], meta_fields=[])

@@ -9,7 +9,9 @@ well-formedness, plan legality (partition / tile coverage / halo
 arithmetic / VMEM budget), differentiability coverage, and the
 pallas-grid write model of every kernel the plan would compile to.
 ``brainslug-cnn`` verifies the full VGG NetGraph end to end (graph SSA +
-dead values, then each nhwc stack segment).
+dead values, then each nhwc stack segment); ``paged-kv`` self-tests the
+serve engine's block-table soundness family (``kv.*``) against a seeded
+mutant.
 
 Exit status is 1 when any *error*-severity finding survives; warnings
 are reported but do not fail the run.  ``--out`` writes the full finding
@@ -23,6 +25,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -123,10 +126,52 @@ def lint_cnn(device: resource.DeviceSpec,
     return fs
 
 
+def lint_paged_kv() -> list[verify.Finding]:
+    """Self-test of the ``kv.*`` block-table soundness family (the serve
+    engine's paged KV cache): a consistent allocator snapshot must verify
+    clean, and a seeded mutant — one shared block left writable by two
+    slot tables without a copy-on-write fork — must be caught and must
+    raise under ``verify='strict'``.  A checker that waves the mutant
+    through is itself the lint failure."""
+    fs: list[verify.Finding] = []
+    clean = verify.BlockTableState(
+        num_blocks=8, block_size=4,
+        refcounts=(2, 1, 1, 0, 0, 0, 0, 1),
+        free=(3, 4, 5, 6),
+        tables=((0, 1), (0, 2)),        # block 0 is a shared prefix
+        lengths=(8, 7),
+        cached=(7,),
+        writers=(1, 2))                 # private tails only: sound
+    for f in verify.check_block_tables(clean):
+        fs.append(verify.Finding(
+            f.invariant, "error", "paged-kv/selftest-clean",
+            f"checker flagged a consistent snapshot: {f}"))
+    # seeded mutant: the shared block 0 joins the write set un-forked
+    mutant = dataclasses.replace(clean, writers=(0, 1, 2))
+    got = verify.check_block_tables(mutant)
+    if not any(f.invariant == "kv.shared-writable" and f.severity == "error"
+               for f in got):
+        fs.append(verify.Finding(
+            "kv.shared-writable", "error", "paged-kv/selftest-mutant",
+            "seeded double-mapped writable block was not caught"))
+        return fs
+    try:
+        verify.enforce(got, "strict", subject="paged-kv selftest")
+    except verify.VerifyError:
+        pass
+    else:
+        fs.append(verify.Finding(
+            "kv.shared-writable", "error", "paged-kv/selftest-mutant",
+            "strict mode did not raise on the seeded mutant"))
+    return fs
+
+
 def lint_arch(arch: str, device: resource.DeviceSpec,
               rows: int = _ROWS) -> list[verify.Finding]:
     if arch == "brainslug-cnn":
         return lint_cnn(device)
+    if arch == "paged-kv":
+        return lint_paged_kv()
     return lint_lm_arch(arch, device, rows)
 
 
@@ -146,7 +191,7 @@ def main(argv=None) -> int:
                     help="write the findings as JSON to this path")
     args = ap.parse_args(argv)
 
-    archs = args.arch or [*ARCH_IDS, "brainslug-cnn"]
+    archs = args.arch or [*ARCH_IDS, "brainslug-cnn", "paged-kv"]
     device = _DEVICES[args.device]
 
     report: dict = {"device": device.name, "archs": {}}

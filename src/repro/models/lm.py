@@ -341,12 +341,31 @@ def tail_decode(tail_params, tail_cache, x, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
-                      dtype=jnp.bfloat16) -> dict:
+                      dtype=jnp.bfloat16, *, kv_layout: str = "dense",
+                      kv_num_blocks: int = 0,
+                      kv_block_size: int = 16) -> dict:
+    """Decode cache for every layer, stacked along the scan axis.
+
+    ``kv_layout="paged"`` swaps each attention layer's dense (B, G,
+    max_len, hd) reservation for a pool of ``kv_num_blocks`` physical
+    blocks of ``kv_block_size`` tokens; one logical block id addresses
+    the same pool row in every layer (the pools are layer-stacked), so a
+    single host-side block table serves the whole model.  Mamba layers
+    keep their dense per-slot state either way — a recurrent state has no
+    block structure to share."""
     plan = layer_plan(cfg)
+    if kv_layout not in ("dense", "paged"):
+        raise ValueError(f"unknown kv_layout {kv_layout!r}; "
+                         f"allowed: 'dense' | 'paged'")
+    if kv_layout == "paged" and kv_num_blocks < 1:
+        raise ValueError("paged kv_layout requires kv_num_blocks >= 1")
 
     def sub_cache(kind: str):
         if kind == "mamba":
             return mamba2.init_cache(cfg, batch, dtype)
+        if kv_layout == "paged":
+            return attention.init_paged_cache(cfg, batch, kv_num_blocks,
+                                              kv_block_size, dtype)
         return attention.init_cache(cfg, batch, max_len, dtype)
 
     cache: dict[str, Any] = {}
@@ -363,22 +382,60 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
-def reset_slots(cache: dict, mask: jnp.ndarray) -> dict:
-    """Zero the decode state of the batch slots where ``mask`` is True.
+def reset_slots(cache: dict, mask: jnp.ndarray,
+                lengths: jnp.ndarray | None = None) -> dict:
+    """Reset the decode state of the batch slots where ``mask`` is True.
 
-    Slot admission primitive for the continuous-batching engine: a freed
-    slot's KV contents, per-slot length, mamba conv window and SSM state
-    are cleared so a new request can prefill from position 0.  Every cache
-    leaf is layer-stacked, so batch is axis 1: (L, B, ...)."""
+    Slot admission primitive for the continuous-batching engine.  Dense
+    leaves (KV contents, per-slot length, mamba conv window and SSM state)
+    are zeroed so a new request can prefill from position 0; every such
+    leaf is layer-stacked, so batch is axis 1: (L, B, ...).
+
+    Paged KV state is block-mapped: the pool is shared, so a freed slot
+    returns its blocks on the *host* (allocator free list) and only its
+    logical ``length`` is rewritten here — to 0, or to ``lengths[b]``
+    when prefix sharing admits the slot mid-prompt (the shared blocks
+    already hold its first ``lengths[b]`` positions)."""
     def leaf(x):
         m = mask.reshape((1, -1) + (1,) * (x.ndim - 2))
         return jnp.where(m, jnp.zeros((), x.dtype), x)
 
-    return jax.tree_util.tree_map(leaf, cache)
+    def node(c):
+        if isinstance(c, attention.PagedKVCache):
+            new_len = (jnp.zeros_like(c.length) if lengths is None
+                       else lengths.astype(c.length.dtype))
+            return attention.PagedKVCache(
+                k_pool=c.k_pool, v_pool=c.v_pool,
+                length=jnp.where(mask[None, :], new_len, c.length))
+        return leaf(c)
+
+    return jax.tree_util.tree_map(
+        node, cache,
+        is_leaf=lambda x: isinstance(x, attention.PagedKVCache))
+
+
+def copy_blocks(cache: dict, src: jnp.ndarray, dst: jnp.ndarray) -> dict:
+    """Copy physical KV block ``src`` -> ``dst`` in every paged layer pool
+    (the copy-on-write fork primitive: the engine allocates ``dst``,
+    copies, and remaps the writing slot's table before the dispatch that
+    would have written into the shared ``src``).  Non-paged leaves are
+    untouched; ``src``/``dst`` are int32 scalars so one jitted trace
+    serves every fork."""
+    def node(c):
+        if isinstance(c, attention.PagedKVCache):
+            return attention.PagedKVCache(
+                k_pool=c.k_pool.at[:, dst].set(c.k_pool[:, src]),
+                v_pool=c.v_pool.at[:, dst].set(c.v_pool[:, src]),
+                length=c.length)
+        return c
+
+    return jax.tree_util.tree_map(
+        node, cache,
+        is_leaf=lambda x: isinstance(x, attention.PagedKVCache))
 
 
 def _decode_sub(kind: str, p, cache, carry, cfg, rt, shared_params=None,
-                active=None):
+                active=None, block_table=None):
     resid, pending = carry
     norm_kw = dict(norm=cfg.norm, mode=rt.mode, interpret=rt.interpret)
     if kind == "mamba":
@@ -392,7 +449,8 @@ def _decode_sub(kind: str, p, cache, carry, cfg, rt, shared_params=None,
     h1, resid = stacks.add_norm(pending, resid, p["norm1"]["scale"],
                                 p["norm1"].get("bias"), **norm_kw)
     attn_out, cache = attention.decode(p["attn"], h1, cache, cfg, rt,
-                                       active=active)
+                                       active=active,
+                                       block_table=block_table)
     h2, resid = stacks.add_norm(attn_out, resid, p["norm2"]["scale"],
                                 p["norm2"].get("bias"), **norm_kw)
     if "moe" in p:
@@ -485,7 +543,8 @@ def ce_loss_fn(h: jnp.ndarray, w: jnp.ndarray,
 
 def decode_step(params, cache: dict, tokens_t: jnp.ndarray,
                 cfg: ModelConfig, rt: RuntimeConfig,
-                active: jnp.ndarray | None = None
+                active: jnp.ndarray | None = None,
+                block_tables: jnp.ndarray | None = None
                 ) -> tuple[jnp.ndarray, dict]:
     """One serving step: tokens_t (B, 1) -> (logits (B, 1, V), new cache).
 
@@ -494,6 +553,10 @@ def decode_step(params, cache: dict, tokens_t: jnp.ndarray,
     but their per-slot cache state — KV write/length, mamba conv window and
     SSM state — is frozen, so one compiled step serves any mix of
     prefilling, decoding and idle slots.
+
+    ``block_tables`` (B, MB) int32 is required for (and only for) a paged
+    KV cache: one table addresses every layer's pool, closed over as a
+    scan constant.
     """
     plan = layer_plan(cfg)
     x = params["embed"][tokens_t]
@@ -509,7 +572,7 @@ def decode_step(params, cache: dict, tokens_t: jnp.ndarray,
             p = blk_params.get(f"sub{j}")
             carry, out_cache[f"sub{j}"] = _decode_sub(
                 kind, p, blk_cache[f"sub{j}"], carry, cfg, rt, shared,
-                active)
+                active, block_tables)
         return carry, out_cache
 
     carry = (x, jnp.zeros_like(x))

@@ -3,6 +3,9 @@ continuous-batching engine (slot admission, mixed jitted step, per-request
 sampling state, dispatch accounting)."""
 from __future__ import annotations
 
+import dataclasses
+import types
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -299,6 +302,48 @@ class TestEngine:
         for a, b in zip(jax.tree_util.tree_leaves(cache),
                         jax.tree_util.tree_leaves(c0)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_priority_orders_admission_ties_fifo(self, dense_server,
+                                                 dense_prompts):
+        """Admission pops the highest priority first; equal priorities
+        fall back to submission order, and results still come back in
+        submission order."""
+        prios = [0, 5, 5, 1]
+        reqs = [Request(request_id=i, prompt=dense_prompts[i],
+                        max_new_tokens=2, priority=p)
+                for i, p in enumerate(prios)]
+        engine = dense_server.engine(slots=1)     # serialize admissions
+        comps = engine.run(reqs)
+        assert engine.last_admission_order == [1, 2, 3, 0]
+        assert [c.request_id for c in comps] == [0, 1, 2, 3]
+        assert all(c.status == "ok" for c in comps)
+        # priority must not change what any request generates
+        base = dense_server.engine(slots=1).run(
+            [dataclasses.replace(r, priority=0) for r in reqs])
+        for got, want in zip(comps, base):
+            assert got.tokens.tolist() == want.tokens.tolist()
+
+    def test_deadline_checks_share_one_tick_timestamp(self, dense_server,
+                                                      dense_prompts,
+                                                      monkeypatch):
+        """All deadline checks in one scheduler tick read the same
+        timestamp.  Under a clock that advances 1s per read, two requests
+        admitted in the same tick both see the same queue wait — per-pop
+        clock reads would push the later pop past its deadline purely by
+        admission order."""
+        t = [0.0]
+
+        def tick():
+            t[0] += 1.0
+            return t[0]
+
+        monkeypatch.setattr(engine_mod, "time",
+                            types.SimpleNamespace(perf_counter=tick))
+        reqs = [Request(request_id=i, prompt=dense_prompts[i],
+                        max_new_tokens=2, deadline_ms=1500.0)
+                for i in range(2)]
+        comps = dense_server.engine(slots=2).run(reqs)
+        assert [c.status for c in comps] == ["ok", "ok"]
 
     def test_reset_slots_clears_only_masked(self, dense_server):
         cfg, rt, params = (dense_server.cfg, dense_server.rt,
