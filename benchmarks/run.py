@@ -5,6 +5,7 @@
   fig15    batch-size scaling of the schedule effect
   roofline three-term roofline per dry-run cell (needs results/dryrun)
   serve    continuous-batching engine vs static batching throughput
+  scaling  data-parallel train-step throughput, 1 -> 8 forced host devices
 
 ``python -m benchmarks.run`` runs everything with CPU-sized defaults and
 writes CSVs under results/bench/.
@@ -52,7 +53,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("benches", nargs="*",
                     default=["fig10", "table2", "fig15", "roofline",
-                             "serve"])
+                             "serve", "scaling"])
     ap.add_argument("--quick", action="store_true",
                     help="smaller grids (CI mode)")
     args = ap.parse_args(argv)
@@ -82,6 +83,10 @@ def main(argv=None) -> int:
                 m.run(**m.QUICK_KWARGS)
             else:
                 m.run()
+        elif bench == "scaling":
+            from benchmarks import scaling_curve as m
+            m.run(device_counts=(1, 8) if args.quick else (1, 2, 4, 8),
+                  steps=3 if args.quick else 6)
         else:
             print(f"unknown bench {bench!r}", file=sys.stderr)
             return 2

@@ -1,0 +1,120 @@
+"""Device-scaling curve: LM train-step throughput 1 -> 8 devices.
+
+Each point runs the explicit data-parallel shard_map driver
+(``repro.distributed.data_parallel``) on an n-device forced host mesh in
+its own subprocess — XLA fixes the host device count at backend init, so
+the parent process cannot sweep it in-process.  Rows carry tokens/s, the
+parallel efficiency vs the 1-device point, and the gradient wire bytes
+the all-reduce moves per step (uncompressed f32 vs the int8
+error-feedback payload).
+
+On CPU the "devices" share the same cores, so tokens/s is flat-to-noisy
+— the artifact is the *curve shape* plumbing (CI asserts the rows exist
+and the wire-byte ratio, not wall-clock scaling, which needs real
+accelerators).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks import common
+
+WORKER = """
+    import json, time
+    import jax, jax.numpy as jnp
+    from repro.distributed import data_parallel as dp_mod
+    from repro.data import pipeline as data_mod
+    from repro.launch import train as tr
+
+    n = {n}; steps = {steps}; compress = {compress}
+    tc = tr.TrainerConfig(arch={arch!r}, steps=steps, mode='xla',
+                          data_parallel=True, compress=compress,
+                          mesh_devices=n, batch_override={batch},
+                          seq_override={seq}, log_every=10**9)
+    trainer = tr.build_trainer(tc)
+    pipe = data_mod.Pipeline(trainer.cfg, trainer.shape,
+                             data_mod.DataConfig(seed=0), start_step=0,
+                             batch_override=trainer.shape.global_batch)
+    it = iter(pipe)
+    p, o = trainer.params, trainer.opt_state
+
+    def next_batch():
+        _, b = next(it)
+        return jax.tree_util.tree_map(jnp.asarray, b)
+
+    p, o, m = trainer.step_fn(p, o, next_batch())      # compile
+    jax.block_until_ready(m['loss'])
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        p, o, m = trainer.step_fn(p, o, next_batch())
+    jax.block_until_ready(m['loss'])
+    dt = time.perf_counter() - t0
+    pipe.close()
+    tokens = {batch} * {seq} * steps
+    print(json.dumps({{
+        'devices': n, 'compress': compress,
+        'tokens_per_s': tokens / dt,
+        'step_ms': dt / steps * 1e3,
+        'loss': float(m['loss']),
+        'wire_bytes_f32': dp_mod.wire_bytes(trainer.params,
+                                            compress=False),
+        'wire_bytes_int8': dp_mod.wire_bytes(trainer.params,
+                                             compress=True),
+    }}))
+"""
+
+
+def _measure(n: int, *, arch: str, steps: int, batch: int, seq: int,
+             compress: bool) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    code = textwrap.dedent(WORKER).format(
+        n=n, steps=steps, compress=compress, arch=arch, batch=batch,
+        seq=seq)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"scaling worker (n={n}) failed:\n"
+                           + out.stderr[-2000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(device_counts=(1, 2, 4, 8), arch="deepseek-7b", steps=6,
+        batch=8, seq=32, out_json="results/bench/scaling_curve.json"):
+    rows = []
+    base = None
+    for n in device_counts:
+        row = _measure(n, arch=arch, steps=steps, batch=batch, seq=seq,
+                       compress=False)
+        if base is None:
+            base = row["tokens_per_s"]
+        row["efficiency"] = row["tokens_per_s"] / (base * n)
+        rows.append(row)
+        print(f"[scaling] devices={n} {row['tokens_per_s']:8.0f} tok/s "
+              f"step={row['step_ms']:.1f}ms "
+              f"eff={row['efficiency']:.2f}", flush=True)
+    # one compressed point at the widest mesh: same curve, 4x fewer
+    # gradient wire bytes (the cross-pod roofline term)
+    n = device_counts[-1]
+    row = _measure(n, arch=arch, steps=steps, batch=batch, seq=seq,
+                   compress=True)
+    row["efficiency"] = row["tokens_per_s"] / (base * n)
+    rows.append(row)
+    ratio = row["wire_bytes_f32"] / row["wire_bytes_int8"]
+    print(f"[scaling] devices={n} (int8 grads) "
+          f"{row['tokens_per_s']:8.0f} tok/s "
+          f"wire {ratio:.2f}x smaller", flush=True)
+    common.write_json(out_json, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -96,6 +96,39 @@ class OptimizedFn:
     #: long-lived serving process can read back what was waived long
     #: after the compile-time warning scrolled away.
     verify_findings: tuple = ()
+    #: Mesh partition plan (None for single-device compiles).  When set,
+    #: stack/kernel executors run inside shard_map regions and
+    #: :meth:`__call__` places concrete input leaves on the mesh
+    #: batch-sharded, so data never round-trips through one device.
+    partitions: Any = None
+
+    def _place_inputs(self, leaves: list) -> list:
+        """Shard concrete input leaves over the mesh's "data" axis (a
+        placement hint — global-view semantics are identical; tracers
+        and already-committed arrays pass through untouched)."""
+        mesh = self.config.mesh
+        if (self.partitions is None or mesh is None
+                or not hasattr(mesh, "devices")):
+            return leaves
+        from jax.sharding import NamedSharding
+
+        from repro.core import partition as partition_mod
+        axes = self.partitions.axes
+        placed = []
+        for leaf, (shape, _dtype) in zip(leaves,
+                                         self.trace_result.leaf_avals):
+            if isinstance(leaf, jax.core.Tracer) or not hasattr(
+                    leaf, "shape"):
+                placed.append(leaf)
+                continue
+            spec = partition_mod.batch_leaf_spec(
+                tuple(shape), self.config.partition, axes)
+            try:
+                placed.append(jax.device_put(leaf,
+                                             NamedSharding(mesh, spec)))
+            except Exception:          # committed elsewhere: leave it be
+                placed.append(leaf)
+        return placed
 
     def __call__(self, *args):
         tr = self.trace_result
@@ -119,6 +152,7 @@ class OptimizedFn:
                     f"shapes/dtypes")
         if self.passthrough is not None:
             return self.passthrough(*args)
+        leaves = self._place_inputs(leaves)
         params = dict(tr.const_params)
         for i, leaf in enumerate(leaves):
             params[f"arg{i}"] = leaf
@@ -157,7 +191,8 @@ class OptimizedFn:
                                         self.shapes, self.config.itemsize,
                                         kernel_dispatch=self.kernel_dispatches,
                                         autotune=self.autotune_decisions,
-                                        verify=self.verify_findings)
+                                        verify=self.verify_findings,
+                                        partitions=self.partitions)
 
     def explain(self) -> str:
         """Human-readable :meth:`report`."""
@@ -194,18 +229,23 @@ def optimize(fn: Callable, *example_args: Any,
         verify_mod.enforce(graph_findings, config.verify,
                            subject=tr.graph.name)
     segments = analyzer.analyze(tr.graph, layout="auto", keep=keep)
+    # Autotuning (incl. the function-level floor) is disabled under a
+    # mesh: timing forced host devices would commit nonsense decisions.
+    under_mesh = config.mesh is not None and config.partition != "none"
     tuner = (autotune_mod.Autotuner.from_config(config)
-             if config.autotune else None)
-    executors, plans, dispatches, tuned, findings = core_api.compile_stacks(
-        segments, tr.shapes, config, param_shapes=tr.param_shapes,
-        dtypes=tr.dtypes, tuner=tuner)
+             if config.autotune and not under_mesh else None)
+    executors, plans, dispatches, tuned, findings, parts = \
+        core_api.compile_stacks(
+            segments, tr.shapes, config, param_shapes=tr.param_shapes,
+            dtypes=tr.dtypes, tuner=tuner)
     net = OptimizedFn(trace_result=tr, segments=segments,
                       executors=executors, plans=plans, config=config,
                       shapes=dict(tr.shapes),
                       param_shapes=dict(tr.param_shapes),
                       kernel_dispatches=dispatches,
                       kernel_matches=matches, autotune_decisions=tuned,
-                      verify_findings=graph_findings + findings)
+                      verify_findings=graph_findings + findings,
+                      partitions=parts)
     if tuner is not None:
         _floor_whole_function(tuner, net, fn, example_args, config)
     return net

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import analyzer, codegen, collapse, ir, resource
 from repro.core import autotune as autotune_mod
+from repro.core import partition as partition_mod
 from repro.core import registry as registry_mod
 from repro.core import verify as verify_mod
 
@@ -70,6 +71,17 @@ class OptimizeConfig:
     # recorded reason instead of stalling compile time.  The baseline is
     # exempt — the floor must always exist.
     autotune_timeout_ms: float | None = 2000.0
+    # Mesh execution (repro.core.partition): a jax.sharding.Mesh (or a
+    # partition.MeshAxes skeleton for static lint) plus a partition mode.
+    # With a mesh, stacks and registry kernels compile inside shard_map
+    # regions with derived PartitionSpecs, and collapse sizes tiles
+    # against the *per-shard* shapes on a haircut per-device VMEM budget
+    # (resource.shard_device).  partition='data' shards batch/rows,
+    # 'tensor' shards heads/features, 'both' does both, 'none' ignores
+    # the mesh.  Autotuning is disabled under a mesh: micro-benchmarks on
+    # forced host devices would commit nonsense decisions.
+    mesh: object | None = None
+    partition: str = "none"
     # Static plan verification (repro.core.verify): re-derive every
     # compile artifact's invariants between the collapse and codegen
     # stages.  'strict' raises VerifyError on any violation before
@@ -104,6 +116,14 @@ class OptimizeConfig:
             raise ValueError(
                 f"autotune_warmup must be a non-negative int, got "
                 f"{self.autotune_warmup!r}")
+        if self.partition not in partition_mod.PARTITIONS:
+            raise ValueError(
+                f"unknown partition {self.partition!r}; allowed: "
+                f"{partition_mod.PARTITIONS}")
+        if self.partition != "none" and self.mesh is None:
+            raise ValueError(
+                f"partition={self.partition!r} needs a mesh "
+                "(OptimizeConfig(mesh=..., partition=...))")
 
 
 #: OpKinds the paper leaves untouched by design ("Convolution and linear
@@ -154,6 +174,21 @@ class AutotuneCoverage:
 
 
 @dataclasses.dataclass(frozen=True)
+class DistCoverage:
+    """One mesh-partitioned segment in the ``report()`` payload: the
+    shard_map boundary specs that were committed and the per-shard VMEM
+    budget the tiles were actually sized against."""
+
+    name: str                   # stack name / kernel op name
+    kind: str                   # 'stack' | 'kernel'
+    in_specs: tuple[tuple[str, str], ...]    # (operand, spec) as strings
+    out_specs: tuple[tuple[str, str], ...]
+    active: bool                # False: every operand ended up replicated
+    shard_budget_bytes: int     # haircut per-device budget (0: no plan)
+    notes: tuple[str, ...] = ()  # why a split was fenced / replicated
+
+
+@dataclasses.dataclass(frozen=True)
 class CoverageReport:
     """What the optimizer captured — the ``report()``/``explain()`` payload.
 
@@ -183,6 +218,11 @@ class CoverageReport:
     #: the violations that were waived; a long-lived serving process reads
     #: them back here long after the compile-time warning scrolled away.
     verify: tuple = ()
+    #: Mesh partitioning: ("data", 4), ("model", 2)-style axis extents
+    #: (empty when no mesh was configured) and one DistCoverage per
+    #: partitioned segment.
+    mesh_axes: tuple = ()
+    dist: tuple[DistCoverage, ...] = ()
 
     @property
     def verify_errors(self) -> int:
@@ -253,6 +293,19 @@ class CoverageReport:
                 lines.append(f"    note: {ev}")
             for variant, why in a.failures:
                 lines.append(f"    candidate {variant} failed: {why}")
+        if self.mesh_axes:
+            lines.append("  mesh " + " x ".join(
+                f"{n}={e}" for n, e in self.mesh_axes))
+        for d in self.dist:
+            state = "sharded" if d.active else "replicated"
+            specs = "  ".join(f"{k}={s}" for k, s in d.in_specs)
+            budget = (f"  per-shard VMEM budget="
+                      f"{d.shard_budget_bytes / 2**20:.2f} MiB"
+                      if d.shard_budget_bytes else "")
+            lines.append(f"  dist {d.kind:6s} {d.name:28s} "
+                         f"{state}  {specs}{budget}")
+            for note in d.notes:
+                lines.append(f"    note: {note}")
         for f in self.verify:
             lines.append(f"  verify [{f.severity}] {f.invariant} "
                          f"@ {f.subject}: {f.detail}")
@@ -266,14 +319,35 @@ def coverage_report(segments, plans: Mapping[int, collapse.CollapsePlan],
                         int, registry_mod.KernelDispatch] | None = None,
                     autotune: Mapping[
                         int, autotune_mod.Decision] | None = None,
-                    verify: tuple = ()
+                    verify: tuple = (),
+                    partitions: "partition_mod.PartitionPlan | None" = None
                     ) -> CoverageReport:
     """Build the per-stack coverage + planned-HBM-traffic report for a
     rewritten network (shared by :class:`OptimizedNet` and the traced-path
     ``repro.api.OptimizedFn``).  ``autotune`` maps segment index (or -1
     for the function-level floor) to its committed decision; ``verify``
-    carries the static verifier's compile-time findings."""
+    carries the static verifier's compile-time findings; ``partitions``
+    is the mesh partition plan (None for single-device compiles)."""
     kernel_dispatch = kernel_dispatch or {}
+    mesh_axes: tuple = ()
+    dist: list[DistCoverage] = []
+    if partitions is not None and partitions.segments:
+        mesh_axes = tuple(zip(partitions.axes.names, partitions.axes.shape))
+        for idx, part in sorted(partitions.segments.items()):
+            seg = segments[idx]
+            is_stack = seg.is_stack
+            name = seg.stack.name if is_stack else seg.op.name
+            plan = plans.get(idx) if is_stack else None
+            dist.append(DistCoverage(
+                name=name, kind="stack" if is_stack else "kernel",
+                in_specs=tuple((k, str(s))
+                               for k, s in part.in_specs.items()),
+                out_specs=tuple((k, str(s))
+                                for k, s in part.out_specs.items()),
+                active=part.active,
+                shard_budget_bytes=(plan.device.resource_limit
+                                    if plan is not None else 0),
+                notes=part.notes))
     tuned = tuple(
         AutotuneCoverage(
             name=d.name, kind=d.kind, requested=d.requested,
@@ -320,7 +394,7 @@ def coverage_report(segments, plans: Mapping[int, collapse.CollapsePlan],
         capture_ratio=n_captured / eligible if eligible else 1.0,
         stacks=tuple(stacks), n_synthetic=n_synthetic,
         n_kernel=len(kernels), kernels=tuple(kernels), autotune=tuned,
-        verify=tuple(verify))
+        verify=tuple(verify), mesh_axes=mesh_axes, dist=tuple(dist))
 
 
 def run_segments(segments, executors: Mapping[int, codegen.Executor],
@@ -361,6 +435,8 @@ class OptimizedNet:
     #: Static-verifier findings recorded at compile time (verify='warn'
     #: waives error findings but keeps them readable here / in report()).
     verify_findings: tuple = ()
+    #: Mesh partition plan (None for single-device compiles).
+    partitions: "partition_mod.PartitionPlan | None" = None
 
     def __call__(self, x: jnp.ndarray,
                  params: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
@@ -382,7 +458,8 @@ class OptimizedNet:
                                self.config.itemsize,
                                kernel_dispatch=self.kernel_dispatches,
                                autotune=self.autotune_decisions,
-                               verify=self.verify_findings)
+                               verify=self.verify_findings,
+                               partitions=self.partitions)
 
     def explain(self) -> str:
         """Human-readable :meth:`report` (ops captured vs. left opaque,
@@ -399,7 +476,8 @@ def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
                               dict[int, collapse.CollapsePlan],
                               dict[int, registry_mod.KernelDispatch],
                               dict[int, autotune_mod.Decision],
-                              tuple]:
+                              tuple,
+                              "partition_mod.PartitionPlan | None"]:
     """Collapse + compile every stack segment, and compile every registry
     KERNEL segment, against ``config`` (shared by :func:`optimize_graph`
     and the traced ``repro.api.optimize`` facade — one place threads
@@ -413,9 +491,33 @@ def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
     invariants; under ``verify='strict'`` a violation raises
     :class:`~repro.core.verify.VerifyError` before anything compiles.
     Returns (executors, plans, kernel dispatch records, autotune
-    decisions, verify findings)."""
-    if tuner is None and config.autotune:
+    decisions, verify findings, partition plan).
+
+    With ``config.mesh`` set (and ``config.partition != 'none'``) every
+    stack / registry-kernel segment gets derived shard_map boundary specs
+    (:func:`repro.core.partition.plan_segments`); active stacks collapse
+    against their **per-shard** input shapes on a haircut per-device
+    budget (:func:`repro.core.resource.shard_device`) — data/tensor
+    splits shrink the shard a device sees, which changes ``tile_rows`` /
+    sequence splits — and codegen wraps their executors in shard_map.
+    Autotuning is disabled under a mesh (measuring forced host devices
+    would commit nonsense); the static planner decides."""
+    partitions: "partition_mod.PartitionPlan | None" = None
+    shard_dev = config.device
+    if config.mesh is not None and config.partition != "none":
+        partitions = partition_mod.plan_segments(
+            segments, shapes, param_shapes, config.partition, config.mesh,
+            sublane=config.device.sublane)
+        shard_dev = resource.shard_device(config.device,
+                                          partitions.axes.n_devices)
+        tuner = None
+    elif tuner is None and config.autotune:
         tuner = autotune_mod.Autotuner.from_config(config)
+    # shard_map wrapping needs real devices; a MeshAxes skeleton (static
+    # lint) still drives per-shard sizing + verification, just no codegen
+    # wrapping.
+    exec_mesh = (config.mesh if partitions is not None
+                 and hasattr(config.mesh, "devices") else None)
     executors: dict[int, codegen.Executor] = {}
     plans: dict[int, collapse.CollapsePlan] = {}
     modes: dict[int, str] = {}
@@ -428,7 +530,18 @@ def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
             continue
         in_shapes = {v: tuple(shapes[v]) for v in seg.stack.inputs}
         mode = config.mode
-        if tuner is not None and config.mode != "barrier":
+        part = partitions.get(idx) if partitions is not None else None
+        if part is not None and part.active:
+            # Per-shard sizing: collapse what ONE device's shard_map
+            # region executes, against the haircut budget.
+            shard_in = partition_mod.shard_shapes(
+                in_shapes, part.in_specs, partitions.axes)
+            plan = collapse.collapse(
+                seg.stack, shard_in, shard_dev,
+                itemsize=config.itemsize,
+                max_steps_per_sequence=config.max_steps_per_sequence,
+                differentiable=config.differentiable)
+        elif tuner is not None and config.mode != "barrier":
             # barrier IS the floor: nothing to measure against
             decision, mode, plan = autotune_mod.tune_stack(
                 tuner, seg.stack, in_shapes, config,
@@ -448,16 +561,18 @@ def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
     if config.verify != "off":
         findings = tuple(verify_mod.verify_segments(
             segments, plans, shapes, config, dtypes=dtypes,
-            param_shapes=param_shapes))
+            param_shapes=param_shapes, partitions=partitions))
         verify_mod.enforce(findings, config.verify)
 
     # Stage 3: codegen (only reached when verification passed or was
     # waived).
     for idx, seg in enumerate(segments):
+        part = partitions.get(idx) if partitions is not None else None
         if seg.is_stack:
             executors[idx] = codegen.compile_plan(
                 plans[idx], mode=modes[idx], interpret=config.interpret,
-                cache_size=config.code_cache_size)
+                cache_size=config.code_cache_size,
+                mesh=exec_mesh, part=part)
         elif seg.op.kind == ir.OpKind.KERNEL:
             backend = reason = None
             if tuner is not None:
@@ -467,8 +582,8 @@ def compile_stacks(segments, shapes: Mapping[str, tuple[int, ...]],
             executors[idx], dispatches[idx] = codegen.compile_kernel_op(
                 seg.op, mode=config.mode, interpret=config.interpret,
                 cache_size=config.code_cache_size, backend=backend,
-                reason=reason)
-    return executors, plans, dispatches, decisions, findings
+                reason=reason, mesh=exec_mesh, part=part)
+    return executors, plans, dispatches, decisions, findings, partitions
 
 
 def optimize_graph(graph: ir.NetGraph,
@@ -490,13 +605,14 @@ def optimize_graph(graph: ir.NetGraph,
             graph, shapes=shapes, keep=frozenset({graph.output})))
         verify_mod.enforce(graph_findings, config.verify,
                            subject=graph.name)
-    executors, plans, dispatches, tuned, findings = compile_stacks(
+    executors, plans, dispatches, tuned, findings, parts = compile_stacks(
         segments, shapes, config)
     return OptimizedNet(graph=graph, segments=segments, executors=executors,
                         plans=plans, config=config, shapes=shapes,
                         kernel_dispatches=dispatches,
                         autotune_decisions=tuned,
-                        verify_findings=graph_findings + findings)
+                        verify_findings=graph_findings + findings,
+                        partitions=parts)
 
 
 def optimize_stack(program: ir.StackProgram,

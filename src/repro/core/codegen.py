@@ -31,9 +31,11 @@ stale counts.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 from typing import Callable, Mapping
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import autodiff
@@ -45,6 +47,94 @@ from repro.kernels.fused_stack import ops as fused_ops
 
 Executor = Callable[[Mapping[str, jnp.ndarray], Mapping[str, jnp.ndarray]],
                     dict[str, jnp.ndarray]]
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """Version-compat shard_map: graduated from jax.experimental, and the
+    replication-checker kwarg was renamed along the way.  The checker is
+    disabled — boundary specs come from the partition planner and are
+    re-derived by the ``dist.*`` verifier invariants instead."""
+    import jax
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return sm(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    raise TypeError("no compatible shard_map signature found")
+
+
+def _spec_axis_names(spec) -> set:
+    """Mesh axis names a PartitionSpec actually shards over."""
+    names: set = set()
+    for entry in tuple(spec):
+        if entry is None:
+            continue
+        for axis in (entry if isinstance(entry, tuple) else (entry,)):
+            names.add(axis)
+    return names
+
+
+def _sharded_call(mesh, body, in_specs, out_specs):
+    """Differentiable shard_map wrapper for bodies built on custom_vjp ops.
+
+    Transposing a shard_map region through a custom_vjp op trips jax's
+    spec check whenever a replicated operand is *not* among the
+    differentiated inputs: the partial-eval path still emits a cotangent
+    for it, and with the replication checker off (required — pallas calls
+    inside the region have no replication rule) the transpose cannot
+    prove that cotangent replicated, so it raises ``_SpecError``.  Fused
+    stacks always carry such operands (scalar constants from the trace).
+
+    So the region is never transposed.  The sharded call is itself a
+    custom_vjp: forward runs one shard_map region; backward runs a
+    *second forward* shard_map region that recomputes the local vjp
+    (recompute-in-backward, same policy as the fused kernels) and psums
+    each cotangent over the output-sharded mesh axes its operand does not
+    shard — partial products on replicated operands become total, while
+    cotangents of sharded operands stay shard-local.
+
+    ``body(*arrays)`` must return a tuple of outputs; every output spec
+    must shard the same axis set (the partition planner derives uniform
+    row sharding per segment, so this holds by construction).
+    """
+    in_specs = tuple(in_specs)
+    out_specs = tuple(out_specs)
+    n_in = len(in_specs)
+    out_axes: set = set()
+    for s in out_specs:
+        out_axes |= _spec_axis_names(s)
+    fwd_sm = _shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs)
+
+    def bwd_region(*arrays):
+        prim, gouts = arrays[:n_in], arrays[n_in:]
+        _, pull = jax.vjp(body, *prim)
+        cts = pull(tuple(gouts))
+        fixed = []
+        for ct, spec in zip(cts, in_specs):
+            reduce_over = tuple(sorted(out_axes - _spec_axis_names(spec)))
+            fixed.append(jax.lax.psum(ct, reduce_over) if reduce_over else ct)
+        return tuple(fixed)
+
+    bwd_sm = _shard_map(bwd_region, mesh,
+                        in_specs=in_specs + out_specs, out_specs=in_specs)
+
+    @jax.custom_vjp
+    def call(*arrays):
+        return fwd_sm(*arrays)
+
+    def call_fwd(*arrays):
+        return fwd_sm(*arrays), arrays
+
+    def call_bwd(res, gouts):
+        return bwd_sm(*res, *gouts)
+
+    call.defvjp(call_fwd, call_bwd)
+    return call
+
 
 #: LRU over compiled executors (stack plans and kernel dispatches alike).
 _CODE_CACHE: "OrderedDict[tuple, Executor]" = OrderedDict()
@@ -98,15 +188,33 @@ def _cache_put(key: tuple, value) -> None:
 
 def compile_plan(plan: collapse_mod.CollapsePlan, *, mode: str = "xla",
                  interpret: bool = True,
-                 cache_size: int | None = None) -> Executor:
-    """Compile a collapse plan into ``executor(inputs, params) -> outputs``."""
+                 cache_size: int | None = None,
+                 mesh=None, part=None) -> Executor:
+    """Compile a collapse plan into ``executor(inputs, params) -> outputs``.
+
+    With ``mesh`` (a real :class:`jax.sharding.Mesh`) and an *active*
+    ``part`` (:class:`repro.core.partition.SegmentPartition`), the
+    executor body runs inside a shard_map region with the partition's
+    boundary specs: each device executes the plan on its shard — which is
+    exactly the shape the plan was collapsed against — and the outer
+    executor keeps the global dict-in/dict-out contract."""
     if cache_size is not None:
         _raise_cache_limit_to(cache_size)
+    wrap = mesh is not None and part is not None and part.active
     # plan.input_shapes keeps same-signature plans with identical tile
     # geometry but different image extents from sharing one executor.
+    # Mesh identity + boundary specs join the key: the same plan wrapped
+    # for a different mesh (or unwrapped) must not share a closure.
+    dist_key = None
+    if wrap:
+        dist_key = (id(mesh),
+                    tuple(sorted((k, s) for k, s in
+                                 (*part.in_specs.items(),
+                                  *part.out_specs.items(),
+                                  *part.param_specs.items()))))
     key = (plan.program.signature(), mode, interpret, plan.input_shapes,
            tuple((s.tile_rows, s.tile_out_h, s.tile_out_w)
-                 for s in plan.sequences))
+                 for s in plan.sequences), dist_key)
     cached = _cache_get(key)
     if cached is not None:
         return cached
@@ -123,7 +231,7 @@ def compile_plan(plan: collapse_mod.CollapsePlan, *, mode: str = "xla",
                 tile_out_h=seq.tile_out_h or 8,
                 tile_out_w=seq.tile_out_w or 8, interpret=interpret)
 
-    def executor(inputs: Mapping[str, jnp.ndarray],
+    def run_body(inputs: Mapping[str, jnp.ndarray],
                  params: Mapping[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
         env = dict(inputs)
         for sub, seq in zip(subprograms, plan.sequences):
@@ -135,6 +243,32 @@ def compile_plan(plan: collapse_mod.CollapsePlan, *, mode: str = "xla",
                 interpret=interpret)
             env.update(out)
         return {v: env[v] for v in plan.program.outputs}
+
+    if not wrap:
+        _cache_put(key, run_body)
+        return run_body
+
+    in_names = tuple(plan.program.inputs)
+    param_names = tuple(part.param_specs)
+    out_names = tuple(plan.program.outputs)
+
+    def positional(*arrays):
+        inputs = dict(zip(in_names, arrays[:len(in_names)]))
+        params = dict(zip(param_names, arrays[len(in_names):]))
+        out = run_body(inputs, params)
+        return tuple(out[v] for v in out_names)
+
+    sharded = _sharded_call(
+        mesh, positional,
+        in_specs=(tuple(part.in_specs[v] for v in in_names)
+                  + tuple(part.param_specs[p] for p in param_names)),
+        out_specs=tuple(part.out_specs[v] for v in out_names))
+
+    def executor(inputs: Mapping[str, jnp.ndarray],
+                 params: Mapping[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+        arrays = [inputs[v] for v in in_names]
+        arrays += [jnp.asarray(params[p]) for p in param_names]
+        return dict(zip(out_names, sharded(*arrays)))
 
     _cache_put(key, executor)
     return executor
@@ -202,7 +336,8 @@ def compile_kernel_op(op: ir.OpNode, *, mode: str = "xla",
                       interpret: bool = True,
                       cache_size: int | None = None,
                       backend: registry_mod.KernelType | None = None,
-                      reason: str | None = None
+                      reason: str | None = None,
+                      mesh=None, part=None
                       ) -> tuple[Executor, registry_mod.KernelDispatch]:
     """Compile one registry KERNEL op; returns (executor, dispatch record).
 
@@ -211,7 +346,12 @@ def compile_kernel_op(op: ir.OpNode, *, mode: str = "xla",
     surface a constraint-driven fallback instead of hiding it.  An
     explicit ``backend`` (with its ``reason``) overrides the static
     planner — the autotuner's measured dispatch arrives through it.
-    """
+
+    With ``mesh`` + an active ``part``, the positional kernel closure is
+    wrapped in a shard_map region with the partition's per-slot specs
+    (batch/rows over "data", heads/features over "model") — *outside*
+    the shared ``kernel_inner`` cache, so the unwrapped closure stays
+    shareable with single-device compiles and the autotuner."""
     if backend is None:
         try:
             dispatch = registry_mod.plan_dispatch(op, mode)
@@ -220,11 +360,29 @@ def compile_kernel_op(op: ir.OpNode, *, mode: str = "xla",
     else:
         dispatch = registry_mod.KernelDispatch(op.attrs["kernel"], backend,
                                                reason)
-    inner = kernel_inner(op, backend=dispatch.backend, interpret=interpret,
-                         cache_size=cache_size)
-
     slots = op.attrs["slots"]
     out_name = op.output
+
+    if mesh is not None and part is not None and part.active:
+        # Inside the shard_map region the kernel sees per-shard operands:
+        # compile the inner closure against the per-shard shapes (its
+        # reshape target and any shape-derived grid must be shard-local).
+        shard_op = dataclasses.replace(op, attrs={
+            **op.attrs,
+            "arg_shapes": tuple(tuple(part.shard_shapes[f"arg{i}"])
+                                for i in range(len(slots))),
+            "out_shape": tuple(part.shard_shapes[out_name])})
+        shard_inner = kernel_inner(shard_op, backend=dispatch.backend,
+                                   interpret=interpret, cache_size=cache_size)
+        tupled = _sharded_call(
+            mesh, lambda *arrays: (shard_inner(*arrays),),
+            in_specs=tuple(part.in_specs[f"arg{i}"]
+                           for i in range(len(slots))),
+            out_specs=(part.out_specs[out_name],))
+        inner = lambda *arrays: tupled(*arrays)[0]  # noqa: E731
+    else:
+        inner = kernel_inner(op, backend=dispatch.backend,
+                             interpret=interpret, cache_size=cache_size)
 
     def executor(inputs: Mapping[str, jnp.ndarray],
                  params: Mapping[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:

@@ -1,0 +1,445 @@
+"""Mesh partition planner — sharded depth-first execution for ``optimize()``.
+
+BrainSlug's depth-first collapse wins by shrinking the working set to fit
+fast memory; on a multi-device mesh the same resource argument applies *per
+shard*.  This module derives, from an ``OptimizeConfig``'s ``mesh`` and
+``partition`` knobs, the :class:`jax.sharding.PartitionSpec` of every stack
+input/output and every registry-kernel operand — and, crucially, the
+**per-shard** shapes the collapser must size its tiles against (a
+batch-sharded stack sees 1/N of its rows per device; a head-sharded flash
+attention sees 1/N of its heads).
+
+The derivation is deliberately conservative: a dim is sharded only when
+
+* the partition mode asks for it (``data`` shards the leading batch/row
+  dim over the ``"data"`` mesh axis; ``tensor`` shards head/feature dims
+  over ``"model"``; ``both`` does both),
+* the dim extent divides the mesh-axis extent exactly (no silent padding —
+  padding changes numerics at norms and softmaxes),
+* the region's semantics stay shard-local under that split — a feature
+  split is only legal across a region with no trailing-axis reduction
+  (``ROW_NORM`` / ``ROW_SOFTMAX`` fence feature sharding; vocab-CE fences
+  vocab sharding; attention fences key/value sequence sharding).  A split
+  that would require a collective *inside* the generated kernel is never
+  emitted — that is the ``dist.collective-placement`` invariant the static
+  verifier re-checks.
+
+Anything that fails these tests is replicated, never mis-sharded: like the
+tracer's OPAQUE fallback, partitioning degrades coverage, not correctness.
+
+Static checking (the verifier, ``repro.lint``) runs against
+:class:`MeshAxes` — the (axis-name, extent) skeleton of a mesh — so every
+invariant is checkable on a single-device CI host with no forced device
+count; only codegen's ``shard_map`` wrapping needs the real
+:class:`jax.sharding.Mesh`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+from repro.core import ir
+
+#: Partition modes OptimizeConfig.partition accepts.
+PARTITIONS = ("none", "data", "tensor", "both")
+
+#: Mesh axis names the planner assigns work to.
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """The shape skeleton of a mesh: axis names and extents, no devices.
+
+    The partition planner and the ``dist.*`` verifier family reason about
+    *this* — so ``repro.lint`` can check every shipped arch against a
+    production-shaped mesh on a 1-device host.  Build one from a real mesh
+    with :meth:`from_mesh`.
+    """
+
+    names: tuple[str, ...]
+    shape: tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        if len(self.names) != len(self.shape):
+            raise ValueError(
+                f"mesh axes/shape mismatch: {self.names} vs {self.shape}")
+        if any(s < 1 for s in self.shape):
+            raise ValueError(f"non-positive mesh axis extent in {self.shape}")
+
+    @classmethod
+    def from_mesh(cls, mesh: Any) -> "MeshAxes":
+        if isinstance(mesh, MeshAxes):
+            return mesh
+        return cls(tuple(mesh.axis_names),
+                   tuple(mesh.shape[a] for a in mesh.axis_names))
+
+    def extent(self, name: str) -> int:
+        """Extent of axis ``name``; 1 when the mesh has no such axis."""
+        try:
+            return self.shape[self.names.index(name)]
+        except ValueError:
+            return 1
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def _pspec(*parts):
+    from jax.sharding import PartitionSpec as P
+    return P(*parts)
+
+
+def replicated(rank: int):
+    return _pspec(*([None] * rank))
+
+
+def data_extent(axes: MeshAxes, partition: str) -> int:
+    return axes.extent(DATA_AXIS) if partition in ("data", "both") else 1
+
+def model_extent(axes: MeshAxes, partition: str) -> int:
+    return axes.extent(MODEL_AXIS) if partition in ("tensor", "both") else 1
+
+
+def spec_factors(spec, axes: MeshAxes) -> tuple[int, ...]:
+    """Per-dim divide factor a PartitionSpec implies on ``axes``."""
+    factors = []
+    for entry in tuple(spec):
+        if entry is None:
+            factors.append(1)
+            continue
+        flat = entry if isinstance(entry, tuple) else (entry,)
+        f = 1
+        for a in flat:
+            f *= axes.extent(a)
+        factors.append(f)
+    return tuple(factors)
+
+
+def shard_shapes(shapes: Mapping[str, tuple[int, ...]],
+                 specs: Mapping[str, Any],
+                 axes: MeshAxes) -> dict[str, tuple[int, ...]]:
+    """Per-shard view of ``shapes`` under ``specs`` — what one device's
+    ``shard_map`` region actually sees, and therefore what the collapser
+    must size tiles against."""
+    out: dict[str, tuple[int, ...]] = {}
+    for name, shape in shapes.items():
+        spec = specs.get(name)
+        if spec is None:
+            out[name] = tuple(shape)
+            continue
+        factors = spec_factors(spec, axes)
+        factors = factors + (1,) * (len(shape) - len(factors))
+        out[name] = tuple(d // f for d, f in zip(shape, factors))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stack partitioning (fused depth-first regions).
+# ---------------------------------------------------------------------------
+
+#: Op kinds that reduce over the trailing (feature) axis — a feature split
+#: across one of these would need an in-kernel psum, so they fence
+#: ``tensor`` sharding of rows-layout stacks.
+_FEATURE_REDUCING = frozenset({ir.OpKind.ROW_NORM, ir.OpKind.ROW_SOFTMAX})
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPartition:
+    """The partition decision for one compiled segment (stack or kernel).
+
+    ``in_specs`` / ``out_specs`` name the shard_map region's boundary
+    specs; ``param_specs`` covers the parameter leaves the region reads
+    (always replicated today — parameters are broadcast, ZeRO-style
+    parameter sharding stays a driver concern).  ``active`` is False when
+    every operand ended up replicated: codegen then skips the shard_map
+    wrapper entirely (a replicated region is pure dispatch overhead).
+    """
+
+    in_specs: dict[str, Any]
+    out_specs: dict[str, Any]
+    param_specs: dict[str, Any]
+    shard_shapes: dict[str, tuple[int, ...]]
+    notes: tuple[str, ...] = ()
+
+    @property
+    def active(self) -> bool:
+        def sharded(spec) -> bool:
+            return any(p is not None for p in tuple(spec))
+        return any(sharded(s) for s in (*self.in_specs.values(),
+                                        *self.out_specs.values()))
+
+
+def stack_param_names(program: ir.StackProgram) -> tuple[str, ...]:
+    """Parameter names a stack executor reads (op ``params`` slots —
+    scale/bias constants bound at trace time, broadcast into the region)."""
+    return tuple(program.param_names)
+
+
+def _rows_shard_ok(shape: tuple[int, ...], n: int, sublane: int) -> bool:
+    """A leading-dim split is legal when the extent divides and each shard
+    keeps whole sublanes of rows (the fused kernels tile rows in sublane
+    multiples; a ragged shard would re-introduce padding rows)."""
+    if not shape or shape[0] % n:
+        return False
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    return (rows // n) % sublane == 0 or (rows // n) >= sublane
+
+
+def plan_stack(program: ir.StackProgram,
+               in_shapes: Mapping[str, tuple[int, ...]],
+               param_shapes: Mapping[str, tuple[int, ...]] | None,
+               partition: str, axes: MeshAxes, *,
+               sublane: int = 8) -> SegmentPartition:
+    """Derive the shard_map boundary specs of one fused stack.
+
+    rows layout: the leading (row/batch) dim shards over ``"data"``; the
+    trailing feature dim shards over ``"model"`` only when no op in the
+    program reduces along features.  nhwc layout: the batch dim shards
+    over ``"data"``; the channel dim over ``"model"`` (every nhwc op —
+    pooling, BN affine, activations — is channel-local by construction).
+    Any operand that fails divisibility replicates the whole stack: a
+    half-sharded region would reshard at every boundary.
+    """
+    shapes = dict(ir.infer_shapes(program, in_shapes))
+    n_data = data_extent(axes, partition)
+    n_model = model_extent(axes, partition)
+    notes: list[str] = []
+
+    feature_ok = n_model > 1 and not any(
+        op.kind in _FEATURE_REDUCING for op in program.ops)
+    if n_model > 1 and not feature_ok:
+        notes.append("feature split fenced: program reduces along features")
+
+    # The row split must agree across every non-broadcast operand.
+    row_dims = {shapes[v][0] for v in (*program.inputs, *program.outputs)
+                if len(shapes[v]) >= 2 and shapes[v][0] != 1}
+    rows_ok = (n_data > 1 and len(row_dims) == 1 and all(
+        _rows_shard_ok(shapes[v], n_data, sublane)
+        for v in (*program.inputs, *program.outputs)
+        if len(shapes[v]) >= 2 and shapes[v][0] != 1))
+    if n_data > 1 and not rows_ok:
+        notes.append(f"row split fenced: leading dims {sorted(row_dims)} "
+                     f"not cleanly divisible by data={n_data}")
+
+    feat_dims = {shapes[v][-1] for v in (*program.inputs, *program.outputs)
+                 if len(shapes[v]) >= 1}
+    feature_ok = feature_ok and len(feat_dims) == 1 and all(
+        d % n_model == 0 and (d // n_model) % sublane == 0
+        for d in feat_dims)
+
+    def spec_for(shape: tuple[int, ...]):
+        parts: list = [None] * len(shape)
+        if rows_ok and len(shape) >= 2 and shape[0] != 1:
+            parts[0] = DATA_AXIS
+        if feature_ok and len(shape) >= 1:
+            parts[-1] = MODEL_AXIS
+        return _pspec(*parts)
+
+    in_specs = {v: spec_for(tuple(shapes[v])) for v in program.inputs}
+    out_specs = {v: spec_for(tuple(shapes[v])) for v in program.outputs}
+
+    # Parameters broadcast into the region, always replicated.  A stack
+    # whose param rank is unknown cannot be wrapped (shard_map needs a
+    # spec per leaf) — replicate the whole segment.
+    param_specs: dict[str, Any] = {}
+    for name in stack_param_names(program):
+        shape = None
+        if param_shapes is not None and name in param_shapes:
+            shape = param_shapes[name]
+        elif name in shapes:
+            shape = shapes[name]
+        if shape is None:
+            notes.append(f"param {name!r} has no recorded shape; replicated")
+            in_specs = {v: replicated(len(shapes[v])) for v in program.inputs}
+            out_specs = {v: replicated(len(shapes[v]))
+                         for v in program.outputs}
+            param_specs = {}
+            break
+        param_specs[name] = replicated(len(shape))
+
+    # Per-shard shapes: shard the boundary operands, then re-infer the
+    # intermediates from the sharded inputs (they shrink with the rows).
+    shard_inputs = shard_shapes(
+        {v: tuple(shapes[v]) for v in program.inputs}, in_specs, axes)
+    per_shard = dict(ir.infer_shapes(program, shard_inputs))
+    return SegmentPartition(in_specs=in_specs, out_specs=out_specs,
+                            param_specs=param_specs,
+                            shard_shapes=per_shard, notes=tuple(notes))
+
+
+# ---------------------------------------------------------------------------
+# Registry-kernel partitioning.
+# ---------------------------------------------------------------------------
+
+def _kernel_slot_shapes(op: ir.OpNode) -> tuple[tuple[int, ...], ...]:
+    return tuple(tuple(s) for s in op.attrs["arg_shapes"])
+
+
+def plan_kernel(op: ir.OpNode, partition: str, axes: MeshAxes,
+                *, sublane: int = 8) -> SegmentPartition:
+    """Derive per-slot shard_map specs for one registry KERNEL op.
+
+    Legal splits per kernel (everything else replicates):
+
+    =========  =========================  ===========================
+    kernel     data ("data" axis)         tensor ("model" axis)
+    =========  =========================  ===========================
+    attention  batch dim of q/k/v/out     head dim of q/k/v/out (BHSD)
+    rmsnorm    leading row dim of x/out   —  (trailing-axis reduction)
+    swiglu     leading row dim            feature dim (elementwise)
+    vocab_ce   token rows of h/labels     —  (log-sum-exp over vocab)
+    =========  =========================  ===========================
+    """
+    kernel = op.attrs["kernel"]
+    arg_shapes = _kernel_slot_shapes(op)
+    out_shape = tuple(op.attrs["out_shape"])
+    n_data = data_extent(axes, partition)
+    n_model = model_extent(axes, partition)
+    notes: list[str] = []
+
+    arg_parts = [[None] * len(s) for s in arg_shapes]
+    out_parts: list = [None] * len(out_shape)
+
+    def try_data(slot_dims: dict[int, int], out_dim: int | None) -> None:
+        """Shard dim ``slot_dims[i]`` of slot i (and ``out_dim`` of the
+        output) over "data" — all-or-nothing across the listed slots."""
+        if n_data <= 1:
+            return
+        ok = all(arg_shapes[i][d] % n_data == 0
+                 for i, d in slot_dims.items())
+        if out_dim is not None:
+            ok = ok and out_shape[out_dim] % n_data == 0
+        if not ok:
+            notes.append(f"{kernel}: batch/rows not divisible by "
+                         f"data={n_data}; replicated")
+            return
+        for i, d in slot_dims.items():
+            arg_parts[i][d] = DATA_AXIS
+        if out_dim is not None:
+            out_parts[out_dim] = DATA_AXIS
+
+    def try_model(slot_dims: dict[int, int], out_dim: int | None,
+                  *, align_quotient: bool = False) -> None:
+        if n_model <= 1:
+            return
+        ok = all(arg_shapes[i][d] % n_model == 0
+                 and (not align_quotient
+                      or (arg_shapes[i][d] // n_model) % sublane == 0)
+                 for i, d in slot_dims.items())
+        if out_dim is not None:
+            ok = ok and out_shape[out_dim] % n_model == 0
+        if not ok:
+            notes.append(f"{kernel}: head/feature dim not divisible by "
+                         f"model={n_model}; replicated")
+            return
+        for i, d in slot_dims.items():
+            arg_parts[i][d] = MODEL_AXIS
+        if out_dim is not None:
+            out_parts[out_dim] = MODEL_AXIS
+
+    if kernel == "attention":
+        # slots: q, k, v — (B, H, S, D) or single-head (B, S, D)
+        try_data({i: 0 for i in range(3)}, 0)
+        if all(len(s) == 4 for s in arg_shapes) and len(out_shape) == 4:
+            try_model({i: 1 for i in range(3)}, 1)
+    elif kernel == "rmsnorm":
+        # slots: x (..., F), gain (F,) — rows shard, features fenced.
+        # A gain broadcast to x's full shape carries the row dim too.
+        if len(arg_shapes[0]) >= 2:
+            rows = {0: 0}
+            if (len(arg_shapes) > 1
+                    and len(arg_shapes[1]) == len(arg_shapes[0])
+                    and arg_shapes[1][0] == arg_shapes[0][0]):
+                rows[1] = 0
+            try_data(rows, 0)
+    elif kernel == "swiglu":
+        # slots: gate, up — (..., F) elementwise
+        if len(arg_shapes[0]) >= 2:
+            try_data({0: 0, 1: 0}, 0)
+        try_model({0: len(arg_shapes[0]) - 1, 1: len(arg_shapes[1]) - 1},
+                  len(out_shape) - 1, align_quotient=True)
+    elif kernel == "vocab_ce":
+        # slots: h (T, D), w, labels (T,) — token rows shard; the vocab
+        # log-sum-exp fences both the D and V dims
+        try_data({0: 0, 2: 0}, 0)
+    else:
+        notes.append(f"unknown kernel {kernel!r}: replicated")
+
+    in_specs = {f"arg{i}": _pspec(*p) for i, p in enumerate(arg_parts)}
+    out_specs = {op.output: _pspec(*out_parts)}
+    per_shard = shard_shapes(
+        {f"arg{i}": s for i, s in enumerate(arg_shapes)},
+        in_specs, axes)
+    per_shard[op.output] = shard_shapes(
+        {op.output: out_shape}, out_specs, axes)[op.output]
+    return SegmentPartition(in_specs=in_specs, out_specs=out_specs,
+                            param_specs={}, shard_shapes=per_shard,
+                            notes=tuple(notes))
+
+
+# ---------------------------------------------------------------------------
+# Whole-compile planning (one entry point for core_api.compile_stacks).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """Partition decisions for every shardable segment of one compile."""
+
+    axes: MeshAxes
+    partition: str
+    segments: dict[int, SegmentPartition]
+
+    def get(self, idx: int) -> SegmentPartition | None:
+        return self.segments.get(idx)
+
+
+def plan_segments(segments, shapes: Mapping[str, tuple[int, ...]],
+                  param_shapes: Mapping[str, tuple[int, ...]] | None,
+                  partition: str, mesh: Any, *,
+                  sublane: int = 8) -> PartitionPlan:
+    """Partition every stack and registry-kernel segment of a compile.
+
+    OPAQUE / backbone segments take no entry: they execute on global
+    arrays and XLA's partitioner places them from the operand shardings
+    the neighboring shard_map regions establish.
+    """
+    axes = MeshAxes.from_mesh(mesh)
+    plans: dict[int, SegmentPartition] = {}
+    if partition == "none":
+        return PartitionPlan(axes=axes, partition=partition, segments=plans)
+    for idx, seg in enumerate(segments):
+        if seg.is_stack:
+            in_shapes = {v: tuple(shapes[v]) for v in seg.stack.inputs}
+            plans[idx] = plan_stack(seg.stack, in_shapes, param_shapes,
+                                    partition, axes, sublane=sublane)
+        elif seg.op.kind == ir.OpKind.KERNEL:
+            plans[idx] = plan_kernel(seg.op, partition, axes,
+                                     sublane=sublane)
+    return PartitionPlan(axes=axes, partition=partition, segments=plans)
+
+
+def batch_leaf_spec(shape: tuple[int, ...], partition: str,
+                    axes: MeshAxes):
+    """Placement spec for one input leaf of an optimized callable: shard
+    the leading dim over "data" when it divides, else replicate.  Only a
+    placement hint — global-view semantics are preserved either way."""
+    n = data_extent(axes, partition)
+    if n > 1 and len(shape) >= 1 and shape[0] and shape[0] % n == 0:
+        return _pspec(DATA_AXIS, *([None] * (len(shape) - 1)))
+    return replicated(len(shape))
+
+
+def shard_shape(shape: tuple[int, ...], spec, axes: MeshAxes
+                ) -> tuple[int, ...]:
+    """Per-shard shape of one operand under ``spec``."""
+    factors = spec_factors(spec, axes)
+    factors = factors + (1,) * (len(shape) - len(factors))
+    return tuple(d // f for d, f in zip(shape, factors))

@@ -284,6 +284,119 @@ def plan_vmem_bytes(plan, *, itemsize: int,
 
 
 # ---------------------------------------------------------------------------
+# Per-shard resource view (mesh execution).  On a multi-device mesh the
+# paper's budget argument applies per shard: each device's shard_map region
+# sees 1/N of the rows (data parallel) or features/heads (tensor parallel),
+# and the VMEM budget shrinks by a staging reserve for the collectives that
+# close the reductions.  Collapse therefore sizes tiles against the sharded
+# shapes on a haircut device; ``shard_view`` is the independent re-check the
+# verifier's ``dist.vmem-refit`` invariant runs against a finished plan.
+# ---------------------------------------------------------------------------
+
+#: Fraction of the VMEM budget reserved for collective staging buffers
+#: (psum / reduce-scatter working space and shard_map boundary copies)
+#: whenever a plan executes under a mesh with more than one device.
+SHARD_RESERVE_FRACTION = 0.125
+
+
+def shard_device(device: DeviceSpec, n_devices: int,
+                 *, reserve_fraction: float = SHARD_RESERVE_FRACTION
+                 ) -> DeviceSpec:
+    """The per-shard sizing device: same hardware, haircut VMEM budget.
+
+    The reserve is charged once the mesh is non-trivial — a 1-device mesh
+    sizes exactly like the single-device path, so enabling a mesh can
+    never change plans until it actually splits work."""
+    if n_devices <= 1:
+        return device
+    return dataclasses.replace(
+        device,
+        name=f"{device.name}/shard{n_devices}",
+        vmem_budget_fraction=device.vmem_budget_fraction
+        * (1.0 - reserve_fraction))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardView:
+    """Per-shard resource accounting of one collapse plan under a mesh.
+
+    ``seq_bytes[i]`` is sequence *i*'s VMEM working set recomputed against
+    the per-shard input shapes; ``budget`` is the haircut per-device limit;
+    ``fits`` is the ``dist.vmem-refit`` verdict.  ``shard_shapes`` records
+    the per-shard boundary shapes the bytes were derived from, so
+    ``explain()`` can show the budget actually used for tile sizing."""
+
+    device: DeviceSpec
+    n_devices: int
+    shard_shapes: tuple[tuple[str, tuple[int, ...]], ...]
+    seq_bytes: tuple[int, ...]
+    differentiable: bool
+
+    @property
+    def budget(self) -> int:
+        return self.device.resource_limit
+
+    @property
+    def fits(self) -> bool:
+        return all(b <= self.budget for b in self.seq_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class _ShardedPlanView:
+    """Duck-plan adapter: the original plan's program/sequences with the
+    per-shard input shapes and haircut device substituted, so
+    :func:`plan_vmem_bytes` re-runs unchanged on the shard view."""
+
+    _plan: "object"
+    device: DeviceSpec
+    input_shapes: tuple[tuple[str, tuple[int, ...]], ...]
+
+    @property
+    def program(self):
+        return self._plan.program
+
+    @property
+    def sequences(self):
+        return self._plan.sequences
+
+    def subprogram(self, i: int):
+        return self._plan.subprogram(i)
+
+
+def shard_view(plan, mesh, specs: Mapping[str, object],
+               *, itemsize: int | None = None,
+               differentiable: bool | None = None) -> ShardView:
+    """Recompute a finished plan's VMEM working set per shard.
+
+    ``mesh`` is a :class:`jax.sharding.Mesh` or a
+    :class:`repro.core.partition.MeshAxes`; ``specs`` maps the plan's
+    input names to their :class:`~jax.sharding.PartitionSpec` (missing
+    names are treated as replicated).  The returned view answers the one
+    question the mesh pipeline needs: *does this plan still fit one
+    device's haircut budget once each device only sees its shard?*
+    """
+    from repro.core import partition
+
+    axes = partition.MeshAxes.from_mesh(mesh)
+    itemsize = plan.itemsize if itemsize is None else itemsize
+    differentiable = (plan.differentiable if differentiable is None
+                      else differentiable)
+    global_shapes = {k: tuple(v) for k, v in plan.input_shapes}
+    per_shard = partition.shard_shapes(global_shapes, specs, axes)
+    dev = shard_device(plan.device, axes.n_devices)
+    view = _ShardedPlanView(
+        _plan=plan, device=dev,
+        input_shapes=tuple(sorted((k, tuple(v))
+                                  for k, v in per_shard.items())))
+    seq_bytes = plan_vmem_bytes(view, itemsize=itemsize,
+                                differentiable=differentiable)
+    return ShardView(device=dev, n_devices=axes.n_devices,
+                     shard_shapes=view.input_shapes,
+                     seq_bytes=tuple(seq_bytes),
+                     differentiable=differentiable)
+
+
+# ---------------------------------------------------------------------------
 # Schedule-level HBM-traffic model (the quantity depth-first execution
 # reduces).  Hardware-independent: counts main-memory reads/writes implied by
 # each schedule, with fast memory (VMEM) holding what the schedule keeps

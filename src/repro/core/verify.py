@@ -165,6 +165,25 @@ INVARIANTS: dict[str, tuple[str, str]] = {
         "src/repro/launch/engine.py",
         "no block on the free list is still reachable from a slot table "
         "or the prefix cache"),
+    "dist.spec-rank": (
+        "src/repro/core/partition.py",
+        "every committed PartitionSpec has rank <= its operand's rank and "
+        "every sharded dim divides its mesh-axis extent exactly"),
+    "dist.mesh-axis": (
+        "src/repro/core/partition.py",
+        "every mesh axis a committed PartitionSpec names exists on the "
+        "configured mesh"),
+    "dist.vmem-refit": (
+        "src/repro/core/resource.py",
+        "every mesh-partitioned stack plan's per-shard VMEM working set, "
+        "re-derived from the global shapes + committed specs "
+        "(resource.shard_view), fits the haircut per-device budget — and "
+        "the plan was collapsed against exactly that shard view"),
+    "dist.collective-placement": (
+        "src/repro/core/partition.py",
+        "no committed spec shards a dim its region reduces over (norm / "
+        "softmax feature axes, attention key sequence, the vocab-CE "
+        "log-sum-exp) — a split that would need an in-kernel collective"),
 }
 
 
@@ -1064,12 +1083,15 @@ def check_kernel_op(op: ir.OpNode,
 def verify_segments(segments: Sequence[Any], plans: Mapping[int, Any],
                     shapes: Mapping[str, tuple[int, ...]], config: Any,
                     *, dtypes: Mapping[str, Any] | None = None,
-                    param_shapes: Mapping[str, tuple[int, ...]] | None = None
+                    param_shapes: Mapping[str, tuple[int, ...]] | None = None,
+                    partitions: Any = None
                     ) -> list[Finding]:
     """The between-compile-stages pass: verify every stack segment's
     program + plan + generated-kernel write model, and every KERNEL
     segment's registry soundness.  Called by ``compile_stacks`` after
-    collapse and before codegen."""
+    collapse and before codegen.  With ``partitions`` (a
+    :class:`repro.core.partition.PartitionPlan`), the ``dist.*`` family
+    re-derives every committed shard_map boundary spec independently."""
     fs: list[Finding] = []
     differentiable = bool(getattr(config, "differentiable", False))
     for idx, seg in enumerate(segments):
@@ -1090,7 +1112,196 @@ def verify_segments(segments: Sequence[Any], plans: Mapping[int, Any],
             fs.extend(check_kernel_op(seg.op, shapes=shapes, dtypes=dtypes,
                                       param_shapes=param_shapes,
                                       differentiable=differentiable))
+    if partitions is not None:
+        fs.extend(check_partitions(segments, plans, partitions, shapes,
+                                   config))
     return fs
+
+
+# ---------------------------------------------------------------------------
+# (6) Mesh partition soundness (``dist.*``).
+# ---------------------------------------------------------------------------
+
+#: Stack op kinds that reduce over the trailing (feature) axis — a
+#: trailing-dim shard across one would need an in-kernel collective.
+_DIST_FEATURE_REDUCING = frozenset({ir.OpKind.ROW_NORM,
+                                    ir.OpKind.ROW_SOFTMAX})
+
+
+def _spec_entries(spec: Any) -> tuple:
+    return tuple(spec)
+
+
+def _check_one_spec(name: str, spec: Any, shape: tuple[int, ...] | None,
+                    axes: Any, subject: str) -> list[Finding]:
+    """spec-rank + mesh-axis consistency of one operand's committed spec."""
+    fs: list[Finding] = []
+    entries = _spec_entries(spec)
+    if shape is not None and len(entries) > len(shape):
+        fs.append(Finding(
+            "dist.spec-rank", "error", subject,
+            f"{name}: spec {spec} has rank {len(entries)} > operand "
+            f"rank {len(shape)} (shape {shape})"))
+        return fs
+    for dim, entry in enumerate(entries):
+        if entry is None:
+            continue
+        flat = entry if isinstance(entry, tuple) else (entry,)
+        for axis in flat:
+            if axis not in axes.names:
+                fs.append(Finding(
+                    "dist.mesh-axis", "error", subject,
+                    f"{name}: spec {spec} names mesh axis {axis!r}; "
+                    f"mesh has {axes.names}"))
+                continue
+            if shape is not None and shape[dim] % axes.extent(axis):
+                fs.append(Finding(
+                    "dist.spec-rank", "error", subject,
+                    f"{name}: dim {dim} extent {shape[dim]} is not "
+                    f"divisible by mesh axis {axis!r}={axes.extent(axis)}"))
+    return fs
+
+
+def _sharded_dims(spec: Any) -> set[int]:
+    return {i for i, e in enumerate(_spec_entries(spec)) if e is not None}
+
+
+def check_partitions(segments: Sequence[Any], plans: Mapping[int, Any],
+                     partitions: Any,
+                     shapes: Mapping[str, tuple[int, ...]],
+                     config: Any) -> list[Finding]:
+    """The ``dist.*`` family: re-derive every committed partition's
+    soundness independently of the planner that produced it.
+
+    * ``dist.spec-rank`` / ``dist.mesh-axis`` — structural consistency of
+      every boundary spec against the operand shapes and the mesh.
+    * ``dist.vmem-refit`` — rebuild the per-shard view from the *global*
+      shapes + committed specs (:func:`repro.core.resource.shard_view`)
+      and require (a) the plan was collapsed against exactly that shard
+      view and (b) its working set fits the haircut per-device budget.
+    * ``dist.collective-placement`` — no spec shards a dim its region
+      reduces over; such a split could only be closed by a collective
+      *inside* the generated kernel, which codegen never emits.
+    """
+    from repro.core import partition as partition_mod
+    from repro.core import resource
+
+    axes = partitions.axes
+    fs: list[Finding] = []
+    differentiable = bool(getattr(config, "differentiable", False))
+    for idx, part in sorted(partitions.segments.items()):
+        seg = segments[idx]
+        is_stack = bool(getattr(seg, "is_stack", False))
+        subject = seg.stack.name if is_stack else seg.op.name
+        # -- structural: every boundary spec, against global shapes ------
+        if is_stack:
+            op_shapes = {v: tuple(shapes[v]) for v in seg.stack.inputs
+                         if v in shapes}
+            op_shapes.update({
+                v: tuple(s) for v, s in ir.infer_shapes(
+                    seg.stack, {k: tuple(shapes[k])
+                                for k in seg.stack.inputs
+                                if k in shapes}).items()})
+        else:
+            op_shapes = {f"arg{i}": tuple(s) for i, s in
+                         enumerate(seg.op.attrs["arg_shapes"])}
+            op_shapes[seg.op.output] = tuple(seg.op.attrs["out_shape"])
+        for group in (part.in_specs, part.out_specs, part.param_specs):
+            for name, spec in group.items():
+                fs.extend(_check_one_spec(name, spec,
+                                          op_shapes.get(name), axes,
+                                          subject))
+        # -- collective placement ---------------------------------------
+        if is_stack:
+            reduces = any(op.kind in _DIST_FEATURE_REDUCING
+                          for op in seg.stack.ops)
+            if reduces:
+                for name, spec in (*part.in_specs.items(),
+                                   *part.out_specs.items()):
+                    shape = op_shapes.get(name)
+                    last = (len(shape) - 1) if shape else None
+                    if last is not None and last in _sharded_dims(spec):
+                        fs.append(Finding(
+                            "dist.collective-placement", "error", subject,
+                            f"{name}: spec {spec} shards the trailing "
+                            "feature dim of a stack containing a "
+                            "trailing-axis reduction"))
+        else:
+            kernel = seg.op.attrs["kernel"]
+            fenced: list[tuple[str, int, str]] = []
+            if kernel == "rmsnorm":
+                x_rank = len(seg.op.attrs["arg_shapes"][0])
+                fenced.append(("arg0", x_rank - 1, "the rms reduction"))
+            elif kernel == "vocab_ce":
+                for i in range(len(seg.op.attrs["arg_shapes"])):
+                    if i == 1:      # w: (D, V) feeds the log-sum-exp
+                        for d in range(len(seg.op.attrs["arg_shapes"][1])):
+                            fenced.append((f"arg{i}", d,
+                                           "the vocab log-sum-exp"))
+            elif kernel == "attention":
+                for i in range(min(3, len(seg.op.attrs["arg_shapes"]))):
+                    rank = len(seg.op.attrs["arg_shapes"][i])
+                    fenced.append((f"arg{i}", rank - 2,
+                                   "the softmax over keys"))
+            for name, dim, why in fenced:
+                spec = part.in_specs.get(name)
+                if spec is not None and dim in _sharded_dims(spec):
+                    fs.append(Finding(
+                        "dist.collective-placement", "error", subject,
+                        f"{name}: spec {spec} shards dim {dim}, which "
+                        f"feeds {why}"))
+        # -- per-shard VMEM refit (active stacks with a plan) ------------
+        plan = plans.get(idx) if is_stack else None
+        if plan is None or not part.active:
+            continue
+        global_in = {v: tuple(shapes[v]) for v in seg.stack.inputs
+                     if v in shapes}
+        if len(global_in) != len(seg.stack.inputs):
+            continue                     # shapes unknown: nothing to refit
+        expect = partition_mod.shard_shapes(global_in, part.in_specs, axes)
+        got = {k: tuple(v) for k, v in plan.input_shapes}
+        if {k: tuple(v) for k, v in expect.items()} != got:
+            fs.append(Finding(
+                "dist.vmem-refit", "error", subject,
+                f"plan was collapsed against {sorted(got.items())}, but "
+                f"the committed specs imply the shard view "
+                f"{sorted(expect.items())}"))
+            continue
+        duck = _GlobalPlanView(plan, config.device,
+                               tuple(sorted((k, tuple(v))
+                                            for k, v in global_in.items())))
+        sv = resource.shard_view(duck, axes, part.in_specs,
+                                 itemsize=config.itemsize,
+                                 differentiable=differentiable)
+        if not sv.fits:
+            fs.append(Finding(
+                "dist.vmem-refit", "error", subject,
+                f"per-shard working set {max(sv.seq_bytes)}B exceeds the "
+                f"haircut per-device budget {sv.budget}B "
+                f"({sv.device.name})"))
+    return fs
+
+
+@dataclasses.dataclass(frozen=True)
+class _GlobalPlanView:
+    """Duck plan handing :func:`repro.core.resource.shard_view` the
+    *global* shapes + unsharded device, so the refit is independent of
+    the per-shard sizing the collapser committed."""
+
+    _plan: Any
+    device: Any
+    input_shapes: tuple
+
+    @property
+    def program(self):
+        return self._plan.program
+
+    @property
+    def sequences(self):
+        return self._plan.sequences
+
+    def subprogram(self, i: int):
+        return self._plan.subprogram(i)
 
 
 def verify_trace(tr: Any) -> list[Finding]:

@@ -51,6 +51,17 @@ def init_error_state(grads: Any) -> Any:
         lambda g: jnp.zeros(g.shape, jnp.float32), grads)
 
 
+def reset_error_state(err: Any) -> Any:
+    """Zero an existing error-feedback accumulator **on checkpoint
+    restore**.  The residual saved at checkpoint time was compensation for
+    a quantization round that the *saved* parameters already absorbed;
+    replaying it after restore injects that correction a second time and
+    biases the first post-resume step.  Resume must restart the feedback
+    loop from zero."""
+    return jax.tree_util.tree_map(
+        lambda e: jnp.zeros(e.shape, jnp.float32), err)
+
+
 def compress_decompress(grads: Any, err: Any) -> tuple[Any, Any]:
     """Apply error feedback: quantize (g + e), dequantize, new error =
     (g + e) - dequantized.  The round trip is what a compressed cross-pod

@@ -1,0 +1,135 @@
+"""Explicit data-parallel train step: one shard_map over the "data" axis.
+
+The default driver path (``launch/train.py`` under GSPMD) lets the
+partitioner insert the gradient all-reduce implicitly.  This module writes
+that reduction by hand with the :mod:`repro.distributed.collectives`
+primitives, which buys two things the implicit path cannot express:
+
+* **compressed reduction** — int8 block-quantized gradients with an
+  error-feedback accumulator (:mod:`repro.distributed.compression`); the
+  quantize/dequantize round trip happens *before* the wire collective, so
+  the all-reduce moves the compressed payload and the residual stays in
+  the train state,
+* **explicit collective choice** — a flat ``psum`` mean or the
+  reduce-scatter + all-gather decomposition
+  (:func:`repro.distributed.collectives.reduce_scatter_mean`), the ZeRO-2
+  building block, selected per config and testable for trajectory parity.
+
+The region computes the *local* fused forward+backward (whatever
+``loss_fn`` lowers to — including the depth-first brainslug kernels, which
+differentiate locally inside the region, never through a shard_map
+transpose), reduces gradients across "data", and applies the optimizer
+redundantly per device on the replicated parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import collectives, compression
+from repro.optim import adamw
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """Version-compat shard_map (graduated from jax.experimental; the
+    replication-checker kwarg was renamed along the way).  The checker is
+    off: pallas calls inside the region have no replication rule."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return sm(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    raise TypeError("no compatible shard_map signature found")
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    data_axis: str = "data"
+    compress: bool = False           # int8 error-feedback gradient payload
+    reduce_scatter: bool = False     # reduce-scatter + all-gather mean
+
+
+def init_state(params: Any, opt_state: Any, *,
+               compress: bool = False) -> dict:
+    """Train state for :func:`make_dp_train_step`.  The error-feedback
+    accumulator is parameter-shaped and lives *in* the state so it rides
+    checkpoints and device placement with everything else."""
+    state = {"params": params, "opt": opt_state}
+    if compress:
+        state["err"] = compression.init_error_state(params)
+    return state
+
+
+def _reduce_mean(grads: Any, dp: DPConfig) -> Any:
+    """Mean all-reduce over the data axis, per leaf.  The reduce-scatter
+    path is the same reduction decomposed (reduce_scatter + all_gather ==
+    all-reduce) for leaves whose leading dim splits evenly; ragged leaves
+    fall back to the flat psum."""
+    n = jax.lax.psum(1, dp.data_axis)
+
+    def leaf(g):
+        if dp.reduce_scatter and g.ndim and g.shape[0] % n == 0:
+            piece = collectives.reduce_scatter_mean(g, dp.data_axis, 0)
+            return jax.lax.all_gather(piece, dp.data_axis, axis=0,
+                                      tiled=True)
+        return jax.lax.psum(g, dp.data_axis) / n
+
+    return jax.tree_util.tree_map(leaf, grads)
+
+
+def make_dp_train_step(loss_fn: Callable[[Any, Any], tuple],
+                       opt_cfg: adamw.AdamWConfig, mesh,
+                       dp: DPConfig = DPConfig()) -> Callable:
+    """Build ``step(state, batch) -> (state, metrics)``.
+
+    ``loss_fn(params, batch) -> (loss, metrics_dict)`` is differentiated
+    *inside* the region (grads are taken locally per shard; the region is
+    never transposed), so any executable loss works — including the fused
+    brainslug lowering.  ``state`` is :func:`init_state`'s dict; ``batch``
+    leaves are sharded along their leading dim over ``dp.data_axis``.
+    """
+    compress = dp.compress
+
+    def region(state, batch):
+        params = state["params"]
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        new_state = dict(state)
+        if compress:
+            grads, new_state["err"] = compression.compress_decompress(
+                grads, state["err"])
+        grads = _reduce_mean(grads, dp)
+        new_state["params"], new_state["opt"], opt_metrics = adamw.update(
+            opt_cfg, grads, state["opt"], params)
+        n = jax.lax.psum(1, dp.data_axis)
+        # shard-local metrics (loss, nll, aux) become the cross-shard mean;
+        # already-replicated ones (gnorm, lr) are fixed points of psum/n
+        metrics = jax.tree_util.tree_map(
+            lambda m: jax.lax.psum(m, dp.data_axis) / n,
+            {**metrics, "loss": loss, **opt_metrics})
+        return new_state, metrics
+
+    step = _shard_map(region, mesh,
+                      in_specs=(P(), P(dp.data_axis)),
+                      out_specs=(P(), P()))
+
+    def apply(state: dict, batch: Any) -> tuple[dict, dict]:
+        return step(state, batch)
+
+    return apply
+
+
+def wire_bytes(grads: Any, *, compress: bool) -> int:
+    """Bytes one device contributes to the gradient all-reduce."""
+    if compress:
+        return compression.compressed_bytes(grads)
+    return sum(g.size * g.dtype.itemsize
+               for g in jax.tree_util.tree_leaves(grads))

@@ -27,6 +27,8 @@ from repro.checkpoint import checkpointer as ckpt
 from repro.configs import LM_SHAPES, get_config
 from repro.configs.base import ModelConfig, RuntimeConfig, ShapeConfig
 from repro.data import pipeline as data_mod
+from repro.distributed import compression
+from repro.distributed import data_parallel as dp_mod
 from repro.distributed import fault_tolerance as ft
 from repro.distributed import sharding as shd
 from repro.launch import mesh as mesh_mod
@@ -50,6 +52,12 @@ class TrainerConfig:
     batch_override: int | None = None
     seq_override: int | None = None
     lr: float = 3e-3
+    # explicit data-parallel driver: shard_map step over the mesh "data"
+    # axis with a hand-written gradient all-reduce (see
+    # repro.distributed.data_parallel) instead of the GSPMD default
+    data_parallel: bool = False
+    compress: bool = False             # int8 error-feedback grad payload
+    mesh_devices: int | None = None    # force an n-device test mesh
     # arbitrary ModelConfig field overrides (applied after reduction) —
     # lets examples size custom models without a new registry entry
     config_overrides: tuple = ()       # of (field, value) pairs
@@ -128,7 +136,8 @@ def build_trainer(tc: TrainerConfig) -> Trainer:
     if tc.seq_override:
         shape = dataclasses.replace(shape, seq_len=tc.seq_override)
 
-    mesh = mesh_mod.make_host_mesh()
+    mesh = (mesh_mod.make_test_mesh(tc.mesh_devices) if tc.mesh_devices
+            else mesh_mod.make_host_mesh())
     rt = RuntimeConfig(mode=tc.mode, remat=tc.remat, interpret=True)
     rules = shd.ShardingRules()
 
@@ -139,21 +148,46 @@ def build_trainer(tc: TrainerConfig) -> Trainer:
         lr=tc.lr if tc.reduced else steps_mod.default_opt_config().lr)
     opt_state = adamw.init(params)
 
-    step = steps_mod.make_train_step(cfg, rt, opt_cfg)
-    ospecs = shd.opt_state_specs(pspecs, mesh)
-    bspecs = steps_mod._maybe_batch_spec(
-        steps_mod.input_specs(cfg, shape), mesh)
+    if tc.data_parallel:
+        # explicit shard_map data-parallel step: params/opt replicated,
+        # batch sharded over "data", hand-written (optionally compressed)
+        # gradient all-reduce inside the region
+        dpc = dp_mod.DPConfig(compress=tc.compress)
 
-    def to_sh(tree):
-        return jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, s), tree,
-            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        def loss(p, b):
+            return lm.loss_fn(p, b, cfg, rt)
 
-    with mesh:
-        step_fn = jax.jit(step,
-                          in_shardings=(to_sh(pspecs), to_sh(ospecs),
-                                        to_sh(bspecs)),
-                          donate_argnums=(0, 1))
+        raw_step = dp_mod.make_dp_train_step(loss, opt_cfg, mesh, dpc)
+        opt_state = {"opt": opt_state}
+        if tc.compress:
+            opt_state["err"] = compression.init_error_state(params)
+
+        def dp_step(p, opt_wrap, batch):
+            state = {"params": p, "opt": opt_wrap["opt"]}
+            if "err" in opt_wrap:
+                state["err"] = opt_wrap["err"]
+            new_state, metrics = raw_step(state, batch)
+            ow = {k: new_state[k] for k in opt_wrap}
+            return new_state["params"], ow, metrics
+
+        with mesh:
+            step_fn = jax.jit(dp_step, donate_argnums=(0, 1))
+    else:
+        step = steps_mod.make_train_step(cfg, rt, opt_cfg)
+        ospecs = shd.opt_state_specs(pspecs, mesh)
+        bspecs = steps_mod._maybe_batch_spec(
+            steps_mod.input_specs(cfg, shape), mesh)
+
+        def to_sh(tree):
+            return jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), tree,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+        with mesh:
+            step_fn = jax.jit(step,
+                              in_shardings=(to_sh(pspecs), to_sh(ospecs),
+                                            to_sh(bspecs)),
+                              donate_argnums=(0, 1))
 
     # ---- auto-resume -------------------------------------------------------
     start_step = 0
@@ -166,6 +200,12 @@ def build_trainer(tc: TrainerConfig) -> Trainer:
         if restored is not None:
             tree, extra, latest = restored
             params, opt_state = tree["params"], tree["opt"]
+            if tc.data_parallel and tc.compress:
+                # the saved residual compensated a quantization the saved
+                # params already absorbed — replaying it would apply that
+                # correction twice; resume restarts the feedback loop
+                opt_state = {**opt_state, "err": compression.
+                             reset_error_state(opt_state["err"])}
             start_step = int(extra.get("next_step", latest))
             print(f"[train] resumed from step {latest} "
                   f"(next_step={start_step})", flush=True)
@@ -203,6 +243,15 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=None)
     ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="explicit shard_map DP step (hand-written "
+                         "gradient all-reduce)")
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 error-feedback gradient compression "
+                         "(requires --data-parallel)")
+    ap.add_argument("--mesh-devices", type=int, default=None,
+                    help="force an n-device test mesh "
+                         "(host platform devices)")
     ap.add_argument("--metrics-out", default="")
     args = ap.parse_args(argv)
 
@@ -211,7 +260,9 @@ def main(argv=None) -> int:
                        reduced=args.reduced, ckpt_dir=args.ckpt_dir,
                        ckpt_every=args.ckpt_every,
                        batch_override=args.batch, seq_override=args.seq,
-                       lr=args.lr)
+                       lr=args.lr, data_parallel=args.data_parallel,
+                       compress=args.compress,
+                       mesh_devices=args.mesh_devices)
     t0 = time.time()
     history = train(tc)
     dt = time.time() - t0

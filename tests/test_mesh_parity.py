@@ -1,0 +1,193 @@
+"""Mesh-parallel parity suite: each test runs in a subprocess with a
+forced 8-device host platform (the main pytest process stays on the
+single real CPU device, per the conftest isolation rule).
+
+Covers the acceptance bar of the mesh subsystem:
+
+* data-parallel gradients through ``optimize(..., partition="data")``
+  match the single-device fused step to 1e-5,
+* tensor-parallel logits for a registry transformer block (rmsnorm +
+  swiglu kernels) match the single-device compile,
+* ``explain()`` reports the per-shard VMEM budget actually used,
+* the compressed (int8 error-feedback) all-reduce tracks the
+  uncompressed loss trajectory over 20 steps,
+* kill/resume through the mesh data-parallel driver
+  (``failure_injector`` + atomic checkpoints) continues the run.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, timeout=420) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_dp_grad_parity_vs_single_device():
+    """Gradients through the mesh-wrapped fused executors must match the
+    single-device brainslug compile to 1e-5 (they run the same kernels on
+    row shards; the only reduction is the boundary psum)."""
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import api
+        from repro.launch.mesh import make_test_mesh
+
+        def loss(x, w):
+            h = x @ w + x
+            h = h / jnp.sqrt(jnp.mean(h * h, axis=-1, keepdims=True)
+                             + 1e-6)
+            return jnp.mean(jnp.tanh(h) * h)
+
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+        mesh = make_test_mesh(8)
+        assert mesh.devices.size == 8
+        net_mesh = api.optimize(loss, x, w, config=api.OptimizeConfig(
+            mode='brainslug', differentiable=True, mesh=mesh,
+            partition='data'))
+        net_one = api.optimize(loss, x, w, config=api.OptimizeConfig(
+            mode='brainslug', differentiable=True))
+        gm = jax.grad(net_mesh, argnums=(0, 1))(x, w)
+        go = jax.grad(net_one, argnums=(0, 1))(x, w)
+        for a, b in zip(gm, go):
+            err = float(jnp.abs(a - b).max())
+            assert err <= 1e-5, err
+        # jit through the mesh executor must also hold
+        gj = jax.jit(jax.grad(net_mesh, argnums=(0, 1)))(x, w)
+        for a, b in zip(gj, go):
+            assert float(jnp.abs(a - b).max()) <= 1e-5
+        """)
+
+
+def test_tp_logits_parity_registry_block():
+    """Tensor-parallel forward of a registry transformer block (rmsnorm +
+    swiglu kernel sites, feature dims over "model") matches the
+    single-device compile."""
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import api
+        from repro.launch.mesh import make_test_mesh
+
+        D, F = 32, 64
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((64, D)), jnp.float32)
+        g = jnp.asarray(1.0 + 0.1 * rng.standard_normal(D), jnp.float32)
+        wg = jnp.asarray(rng.standard_normal((D, F)) * 0.2, jnp.float32)
+        wu = jnp.asarray(rng.standard_normal((D, F)) * 0.2, jnp.float32)
+        wd = jnp.asarray(rng.standard_normal((F, D)) * 0.2, jnp.float32)
+
+        def block(x, g, wg, wu, wd):
+            var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+            h = x * jax.lax.rsqrt(var + 1e-6) * g
+            gate, up = h @ wg, h @ wu
+            act = gate * jax.nn.sigmoid(gate) * up
+            return x + act @ wd
+
+        mesh = make_test_mesh(8, model_parallel=2)
+        net_mesh = api.optimize(block, x, g, wg, wu, wd,
+                                config=api.OptimizeConfig(
+                                    mode='brainslug', mesh=mesh,
+                                    partition='tensor'))
+        net_one = api.optimize(block, x, g, wg, wu, wd,
+                               config=api.OptimizeConfig(
+                                   mode='brainslug'))
+        assert net_mesh.report().kernel_hits == {'rmsnorm': 1,
+                                                 'swiglu': 1}
+        om = net_mesh(x, g, wg, wu, wd)
+        oo = net_one(x, g, wg, wu, wd)
+        err = float(jnp.abs(om - oo).max())
+        assert err <= 1e-5, err
+        """)
+
+
+def test_explain_reports_per_shard_budget():
+    """explain() must surface the mesh axes and the haircut per-shard
+    VMEM budget the collapser actually sized tiles against."""
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import api
+        from repro.core import resource
+        from repro.launch.mesh import make_test_mesh
+
+        def fn(x):
+            h = jnp.tanh(x) * x
+            return h / jnp.sqrt(jnp.mean(h * h, axis=-1, keepdims=True)
+                                + 1e-6)
+
+        x = jnp.ones((64, 128), jnp.float32)
+        mesh = make_test_mesh(8)
+        net = api.optimize(fn, x, config=api.OptimizeConfig(
+            mode='brainslug', mesh=mesh, partition='data'))
+        text = str(net.report())
+        assert 'mesh data=8' in text, text
+        assert 'per-shard VMEM budget' in text, text
+        # the reported budget must be the haircut shard budget
+        dev = resource.TPU_V5E
+        budget = resource.shard_device(dev, 8).resource_limit
+        mib = budget / (1024 * 1024)
+        assert f'{mib:.2f} MiB' in text, text
+        """)
+
+
+def test_compressed_trajectory_tracks_uncompressed():
+    """20 DP train steps with the int8 error-feedback all-reduce must
+    track the uncompressed trajectory (error feedback keeps the bias
+    bounded; trajectories agree to a few percent)."""
+    _run("""
+        import numpy as np
+        from repro.launch import train as tr
+
+        losses = {}
+        for compress in (False, True):
+            tc = tr.TrainerConfig(
+                arch='deepseek-7b', steps=20, mode='xla',
+                data_parallel=True, compress=compress, mesh_devices=8,
+                batch_override=8, seq_override=32, log_every=100)
+            hist = tr.train(tc)
+            losses[compress] = [h['loss'] for h in hist]
+        a = np.asarray(losses[False])
+        b = np.asarray(losses[True])
+        assert len(a) == len(b) == 20
+        np.testing.assert_allclose(a, b, rtol=0.05, atol=0.05)
+        assert a[-1] < a[0]          # both actually train
+        assert b[-1] < b[0]
+        """, timeout=600)
+
+
+def test_kill_resume_through_mesh_driver(tmp_path):
+    """A simulated failure mid-run resumes from the latest atomic
+    checkpoint through the mesh DP driver and completes the remaining
+    steps (error-feedback state restarts from zero on restore)."""
+    _run(f"""
+        from repro.launch import train as tr
+        from repro.distributed.fault_tolerance import (SimulatedFailure,
+                                                       failure_injector)
+
+        tc = tr.TrainerConfig(
+            arch='deepseek-7b', steps=8, mode='xla', data_parallel=True,
+            compress=True, mesh_devices=8, batch_override=8,
+            seq_override=32, ckpt_dir={str(tmp_path)!r}, ckpt_every=4,
+            log_every=100)
+        try:
+            tr.train(tc, failure_hook=failure_injector({{6}}))
+            raise AssertionError('failure was not injected')
+        except SimulatedFailure:
+            pass
+        hist = tr.train(tc)
+        steps = [h['step'] for h in hist]
+        assert steps[0] >= 5 and steps[-1] == 7, steps
+        """, timeout=600)

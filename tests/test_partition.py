@@ -1,0 +1,283 @@
+"""Unit tests for the mesh partition subsystem: the planner
+(:mod:`repro.core.partition`), the per-shard resource view
+(:func:`repro.core.resource.shard_device` / ``shard_view``), the
+``dist.*`` verifier family, the lint integration, and the
+error-feedback compression state (including the reset-on-restore
+regression).  All single-process — no devices are needed to reason
+about :class:`~repro.core.partition.MeshAxes`."""
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import api
+from repro.core import collapse, ir, partition, resource, verify
+from repro.distributed import compression
+from repro.layers import stacks
+
+AXES = partition.MeshAxes(("data", "model"), (4, 2))
+
+
+def _pshapes(program, feat):
+    """Feature-shaped broadcast params (norm gain/bias) for the planner."""
+    return {p: (feat,) for p in partition.stack_param_names(program)}
+
+
+class TestMeshAxes:
+    def test_extents(self):
+        assert AXES.extent("data") == 4
+        assert AXES.extent("model") == 2
+        assert AXES.extent("pod") == 1          # absent axis: extent 1
+        assert AXES.n_devices == 8
+
+    def test_shard_shapes_divides_named_dims(self):
+        out = partition.shard_shapes(
+            {"x": (64, 32), "y": (16,)},
+            {"x": P("data", "model")}, AXES)
+        assert out["x"] == (16, 16)
+        assert out["y"] == (16,)                # no spec: global shape
+
+
+class TestPlanStack:
+    def test_rows_shard_over_data(self):
+        program = stacks.norm_program("rms", 1e-6, False)
+        part = partition.plan_stack(program, {"x": (512, 256)},
+                                    _pshapes(program, 256), "data", AXES)
+        assert part.active
+        spec = part.in_specs["x"]
+        assert tuple(spec)[0] == "data"
+
+    def test_feature_reduction_fences_model_axis(self):
+        """A norm stack reduces over features: the trailing dim must stay
+        unsharded even when the partition asks for tensor parallelism."""
+        program = stacks.norm_program("rms", 1e-6, False)
+        part = partition.plan_stack(program, {"x": (512, 256)},
+                                    _pshapes(program, 256), "both", AXES)
+        for spec in (*part.in_specs.values(), *part.out_specs.values()):
+            assert tuple(spec)[-1] is None
+
+    def test_elementwise_stack_takes_model_axis(self):
+        program = stacks.glu_program("silu")
+        part = partition.plan_stack(
+            program, {"gate": (512, 256), "up": (512, 256)}, {},
+            "both", AXES)
+        assert any(tuple(s)[-1] == "model"
+                   for s in part.in_specs.values())
+
+    def test_indivisible_rows_replicate(self):
+        program = stacks.norm_program("rms", 1e-6, False)
+        part = partition.plan_stack(program, {"x": (6, 256)},
+                                    _pshapes(program, 256), "data", AXES)
+        assert not part.active
+
+    def test_param_specs_cover_stack_params(self):
+        program = stacks.norm_program("rms", 1e-6, True)
+        names = partition.stack_param_names(program)
+        assert names == tuple(program.param_names)
+
+
+class TestPlanKernel:
+    def _op(self, kernel, arg_shapes, out_shape):
+        return ir.OpNode(
+            kind=ir.OpKind.KERNEL, name=f"{kernel}_site",
+            inputs=tuple(f"arg{i}" for i in range(len(arg_shapes))),
+            output="out",
+            attrs={"kernel": kernel, "slots": (), "arg_shapes": arg_shapes,
+                   "out_shape": out_shape, "out_dtype": jnp.float32})
+
+    def test_rmsnorm_rows_only(self):
+        op = self._op("rmsnorm", ((512, 256), (256,)), (512, 256))
+        part = partition.plan_kernel(op, "both", AXES)
+        assert tuple(part.in_specs["arg0"])[0] == "data"
+        assert tuple(part.in_specs["arg0"])[-1] is None
+
+    def test_vocab_ce_w_replicated(self):
+        op = self._op("vocab_ce", ((512, 64), (64, 1024), (512,)), (1,))
+        part = partition.plan_kernel(op, "both", AXES)
+        assert all(e is None for e in tuple(part.in_specs["arg1"]))
+
+    def test_attention_heads_over_model(self):
+        op = self._op("attention",
+                      ((4, 8, 16, 32),) * 3, (4, 8, 16, 32))
+        part = partition.plan_kernel(op, "both", AXES)
+        spec = tuple(part.in_specs["arg0"])
+        assert spec[0] == "data" and spec[1] == "model"
+        assert spec[2] is None                  # softmax over keys: fenced
+
+
+class TestShardResources:
+    def test_shard_device_haircut(self):
+        dev = resource.TPU_V5E
+        sdev = resource.shard_device(dev, 8)
+        assert sdev.name.endswith("/shard8")
+        expect = dev.resource_limit * (1 - resource.SHARD_RESERVE_FRACTION)
+        assert sdev.resource_limit == pytest.approx(expect, rel=1e-6)
+
+    def test_shard_device_identity_single(self):
+        assert resource.shard_device(resource.TPU_V5E, 1) is resource.TPU_V5E
+
+    def test_shard_view_fits_smaller_than_global(self):
+        program = stacks.norm_program("rms", 1e-6, False)
+        shapes = {"x": (512, 256)}
+        part = partition.plan_stack(program, shapes, _pshapes(program, 256),
+                                    "data", AXES)
+        shard_in = partition.shard_shapes(shapes, part.in_specs, AXES)
+        sdev = resource.shard_device(resource.TPU_V5E, AXES.n_devices)
+        plan = collapse.collapse(program, shard_in, sdev, itemsize=2)
+        duck = SimpleNamespace(
+            _plan=plan, device=resource.TPU_V5E,
+            input_shapes=tuple(sorted((k, tuple(v))
+                                      for k, v in shapes.items())),
+            program=plan.program,
+            sequences=plan.sequences,
+            subprogram=plan.subprogram)
+        sv = resource.shard_view(duck, AXES, part.in_specs, itemsize=2,
+                                 differentiable=False)
+        assert sv.fits
+        assert sv.budget < resource.TPU_V5E.resource_limit
+
+
+class TestOptimizeConfigValidation:
+    def test_partition_requires_mesh(self):
+        with pytest.raises(ValueError):
+            api.OptimizeConfig(partition="data")
+
+    def test_unknown_partition_rejected(self):
+        with pytest.raises(ValueError):
+            api.OptimizeConfig(partition="rowwise", mesh=object())
+
+
+class TestDistVerifier:
+    def _run(self, part, program, shapes):
+        pp = partition.PartitionPlan(axes=AXES, partition="both",
+                                     segments={0: part})
+        seg = SimpleNamespace(is_stack=True, stack=program, op=None)
+        cfg = SimpleNamespace(device=resource.TPU_V5E, itemsize=2,
+                              differentiable=False)
+        return verify.check_partitions([seg], {}, pp, shapes, cfg)
+
+    def test_planner_output_is_clean(self):
+        program = stacks.norm_program("rms", 1e-6, False)
+        shapes = {"x": (512, 256)}
+        part = partition.plan_stack(program, shapes, _pshapes(program, 256),
+                                    "both", AXES)
+        assert verify.errors(self._run(part, program, shapes)) == []
+
+    def test_overrank_spec_caught(self):
+        program = stacks.norm_program("rms", 1e-6, False)
+        shapes = {"x": (512, 256)}
+        part = partition.plan_stack(program, shapes, _pshapes(program, 256),
+                                    "both", AXES)
+        bad = dataclasses.replace(
+            part, in_specs={"x": P("data", None, "model")})
+        assert any(f.invariant == "dist.spec-rank"
+                   for f in verify.errors(self._run(bad, program, shapes)))
+
+    def test_unknown_axis_caught(self):
+        program = stacks.norm_program("rms", 1e-6, False)
+        shapes = {"x": (512, 256)}
+        part = partition.plan_stack(program, shapes, _pshapes(program, 256),
+                                    "both", AXES)
+        bad = dataclasses.replace(part, in_specs={"x": P("pod", None)})
+        assert any(f.invariant == "dist.mesh-axis"
+                   for f in verify.errors(self._run(bad, program, shapes)))
+
+    def test_reduction_shard_caught(self):
+        program = stacks.norm_program("rms", 1e-6, False)
+        shapes = {"x": (512, 256)}
+        part = partition.plan_stack(program, shapes, _pshapes(program, 256),
+                                    "both", AXES)
+        bad = dataclasses.replace(part,
+                                  in_specs={"x": P("data", "model")})
+        assert any(f.invariant == "dist.collective-placement"
+                   for f in verify.errors(self._run(bad, program, shapes)))
+
+    def test_indivisible_extent_caught(self):
+        program = stacks.norm_program("rms", 1e-6, False)
+        shapes = {"x": (510, 256)}          # 510 % 4 != 0
+        part = partition.plan_stack(program, {"x": (512, 256)},
+                                    _pshapes(program, 256), "both", AXES)
+        assert any(f.invariant == "dist.spec-rank"
+                   for f in verify.errors(self._run(part, program, shapes)))
+
+
+class TestLintIntegration:
+    def test_dist_lint_clean_on_arch_programs(self):
+        from repro import lint
+        program = stacks.norm_program("rms", 1e-6, False)
+        fs = lint.lint_dist_program(program, {"x": (512, 256)},
+                                    resource.TPU_V5E, itemsize=2)
+        assert verify.errors(fs) == []
+
+    def test_dist_selftest_clean(self):
+        from repro import lint
+        assert verify.errors(
+            lint.lint_dist_selftest(resource.TPU_V5E)) == []
+
+
+class TestCompressionErrorState:
+    def test_roundtrip_accumulates_error(self):
+        rng = np.random.default_rng(0)
+        grads = {"w": jnp.asarray(rng.standard_normal((64, 64)),
+                                  jnp.float32)}
+        err = compression.init_error_state(grads)
+        deq, err = compression.compress_decompress(grads, err)
+        assert float(jnp.abs(err["w"]).max()) > 0   # int8 is lossy
+
+    def test_reset_error_state_zeroes(self):
+        """Regression: the error-feedback residual must restart from zero
+        on checkpoint restore — the saved residual compensated a
+        quantization the saved parameters already absorbed, so replaying
+        it applies the correction twice."""
+        rng = np.random.default_rng(1)
+        grads = {"a": jnp.asarray(rng.standard_normal((32, 32)),
+                                  jnp.float32),
+                 "b": jnp.asarray(rng.standard_normal(256), jnp.float32)}
+        err = compression.init_error_state(grads)
+        _, err = compression.compress_decompress(grads, err)
+        assert any(float(jnp.abs(e).max()) > 0
+                   for e in err.values())
+        reset = compression.reset_error_state(err)
+        assert set(reset) == set(err)
+        for k, e in reset.items():
+            assert e.shape == err[k].shape
+            assert float(jnp.abs(e).max()) == 0.0
+
+    def test_train_driver_restore_resets_error(self, tmp_path):
+        """The driver's restore path must call reset_error_state: write a
+        checkpoint with a non-zero residual, rebuild the trainer, and
+        require the restored accumulator to be zero."""
+        from repro.checkpoint import checkpointer as ckpt
+        from repro.launch import train as train_mod
+
+        tc = train_mod.TrainerConfig(
+            arch="deepseek-7b", steps=2, mode="xla", data_parallel=True,
+            compress=True, batch_override=2, seq_override=16,
+            ckpt_dir=str(tmp_path))
+        trainer = train_mod.build_trainer(tc)
+        assert "err" in trainer.opt_state
+        poisoned = {
+            "opt": trainer.opt_state["opt"],
+            "err": jax.tree_util.tree_map(
+                lambda e: jnp.full(e.shape, 0.5, jnp.float32),
+                trainer.opt_state["err"]),
+        }
+        ckpt.save(str(tmp_path), 1,
+                  {"params": trainer.params, "opt": poisoned},
+                  extra={"next_step": 1, "loss": 1.0})
+        if trainer.checkpointer is not None:
+            trainer.checkpointer.close()
+        resumed = train_mod.build_trainer(tc)
+        try:
+            assert resumed.start_step == 1
+            for e in jax.tree_util.tree_leaves(resumed.opt_state["err"]):
+                assert float(jnp.abs(e).max()) == 0.0
+        finally:
+            if resumed.checkpointer is not None:
+                resumed.checkpointer.close()

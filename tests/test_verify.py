@@ -382,7 +382,7 @@ class TestPipelineGate:
         segments, shapes = _kernel_segment_with_drift()
         cfg = core_api.OptimizeConfig(verify="warn")
         with pytest.warns(UserWarning, match="repro.verify"):
-            executors, _, _, _, findings = core_api.compile_stacks(
+            executors, _, _, _, findings, _ = core_api.compile_stacks(
                 segments, shapes, cfg)
         assert 0 in executors                   # compile still succeeded
         assert any(f.invariant == "kernel.aval-mismatch" for f in findings)
@@ -397,7 +397,7 @@ class TestPipelineGate:
         cfg = core_api.OptimizeConfig(verify="off")
         with warnings.catch_warnings():
             warnings.simplefilter("error")
-            executors, _, _, _, findings = core_api.compile_stacks(
+            executors, _, _, _, findings, _ = core_api.compile_stacks(
                 segments, shapes, cfg)
         assert 0 in executors
         assert findings == ()
