@@ -13,17 +13,24 @@ served twice over the same params:
   (``kv_layout="paged"``) with prefix sharing: requests drawn from the
   shared-prefix traffic mix map the same immutable prompt blocks instead
   of re-prefilling them.
+* **engine-paged-brainslug** — the paged engine under ``mode="brainslug"``
+  so the decode dispatches the pallas ``paged_flash_decode`` kernel (the
+  serving fast path; the row records ``decode_path`` from the engine's
+  trace-time dispatch counters).
+* **engine-sharded** (``--mesh N``) — the dense engine with its mixed
+  step in a shard_map region over a forced N-device host mesh
+  (``--model-parallel`` splits attention heads over "model").
 
-The queue is ragged (mixed prompt tails, mixed stop lengths) with a
-configurable shared-prefix fraction.  The paged and dense engines must
-produce token-identical greedy completions — ``run()`` raises on any
-divergence, which is the CI parity gate.
+Every engine variant must produce greedy completions token-identical to
+engine-dense on the same queue — ``run()`` raises on any divergence,
+which is the CI parity gate.
 
 Writes ``results/bench/serve_throughput.json`` (one row per driver, in the
 same artifact style as fig10/table2): wall time, generated tokens/s, p50 /
-p99 request latency, dispatch counts, decode slot-step work, slot
-utilization, and the paged-KV counters (``kv_block_utilization``,
-``prefix_hit_tokens``, ``cow_forks``, peak ``blocks_in_use``).
+p99 request latency, TTFT percentiles, dispatch counts, decode slot-step
+work, slot utilization, and the paged-KV counters
+(``kv_block_utilization``, ``prefix_hit_tokens``, ``cow_forks``, peak
+``blocks_in_use``).
 
   PYTHONPATH=src:. python -m benchmarks.serve_throughput --quick
 """
@@ -31,7 +38,27 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import sys
+
+
+def _force_host_devices_from_argv() -> None:
+    """``--mesh N`` needs N host devices, and the XLA flag must land
+    before jax initializes its backend — i.e. before the repro imports
+    below, which is why this scans argv instead of waiting for argparse."""
+    if "--mesh" not in sys.argv:
+        return
+    try:
+        n = int(sys.argv[sys.argv.index("--mesh") + 1])
+    except (IndexError, ValueError):
+        return
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if flag not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+
+
+_force_host_devices_from_argv()
 
 import numpy as np
 
@@ -132,6 +159,7 @@ def run(n_requests: int = 2000, slots: int = 4, new_tokens: int = 8,
         prefill_chunk: int = 4, prefix_lens: tuple[int, ...] = (8, 12),
         prefix_frac: float = 0.5, kv_block_size: int = 4,
         kv_num_blocks: int | None = None,
+        mesh_devices: int = 0, model_parallel: int = 1,
         out_path: str = "results/bench/serve_throughput.json") -> list[dict]:
     max_prompt = max(prompt_lens) + max(prefix_lens or (0,))
     sc = ServeConfig(arch=arch, mode=mode, batch=slots,
@@ -162,17 +190,57 @@ def run(n_requests: int = 2000, slots: int = 4, new_tokens: int = 8,
     paged = engine_p.last_stats.as_dict()
     paged["dispatch_delta"] = dict(engine_p.last_dispatch or {})
 
-    # parity gate: the paged layout is a memory-system refactor, not a
-    # model change — greedy completions must be token-identical to dense
-    # on the same queue, or the benchmark (and the CI smoke that runs it)
-    # fails loudly
-    diverged = [a.request_id for a, b in zip(out_dense, out_paged)
-                if a.status != b.status
-                or not np.array_equal(a.tokens, b.tokens)]
-    if diverged:
-        raise RuntimeError(
-            f"paged/dense parity violation: request ids {diverged[:10]} "
-            f"({len(diverged)} of {len(reqs)}) diverged")
+    def parity_gate(name: str, out_other: list) -> None:
+        # parity gate: every engine variant is a memory-system / placement
+        # / kernel refactor, not a model change — greedy completions must
+        # be token-identical to dense on the same queue, or the benchmark
+        # (and the CI smoke that runs it) fails loudly
+        diverged = [a.request_id for a, b in zip(out_dense, out_other)
+                    if a.status != b.status
+                    or not np.array_equal(a.tokens, b.tokens)]
+        if diverged:
+            raise RuntimeError(
+                f"{name}/dense parity violation: request ids "
+                f"{diverged[:10]} ({len(diverged)} of {len(reqs)}) diverged")
+
+    parity_gate("paged", out_paged)
+
+    variants = [("engine-dense", dense, engine_d),
+                ("engine-paged", paged, engine_p)]
+
+    if mode != "brainslug":
+        # pallas serving fast path: the same queue under mode="brainslug"
+        # dispatches paged_flash_decode in the mixed step.  The server is
+        # rebuilt from the same seed, so its params are identical and the
+        # greedy-parity gate applies unchanged.
+        server_b = Server(dataclasses.replace(sc, mode="brainslug"))
+        engine_b = server_b.engine(
+            slots=slots, prefill_chunk=prefill_chunk, kv_layout="paged",
+            kv_block_size=kv_block_size, kv_num_blocks=kv_num_blocks)
+        out_brain = engine_b.run(reqs)
+        parity_gate("brainslug", out_brain)
+        brain = engine_b.last_stats.as_dict()
+        brain["dispatch_delta"] = dict(engine_b.last_dispatch or {})
+        variants.append(("engine-paged-brainslug", brain, engine_b))
+
+    if mesh_devices:
+        import jax
+
+        from repro.launch import mesh as mesh_mod
+        if jax.device_count() < mesh_devices:
+            print(f"  [skip] engine-sharded: {jax.device_count()} devices "
+                  f"< --mesh {mesh_devices} (XLA_FLAGS must force host "
+                  f"devices before jax initializes)")
+        else:
+            mesh = mesh_mod.make_test_mesh(mesh_devices,
+                                           model_parallel=model_parallel)
+            engine_s = server.engine(slots=slots,
+                                     prefill_chunk=prefill_chunk, mesh=mesh)
+            out_shard = engine_s.run(reqs)
+            parity_gate("sharded", out_shard)
+            shard = engine_s.last_stats.as_dict()
+            shard["dispatch_delta"] = dict(engine_s.last_dispatch or {})
+            variants.append(("engine-sharded", shard, engine_s))
 
     # never-slower driver decision: serve the same queue once more under
     # each driver through the autotuner (single repeat — these are whole
@@ -195,8 +263,7 @@ def run(n_requests: int = 2000, slots: int = 4, new_tokens: int = 8,
         baseline="static", requested="engine-paged", repeats=1, warmup=0)
 
     rows = []
-    for driver, d in (("static", static), ("engine-dense", dense),
-                      ("engine-paged", paged)):
+    for driver, d, eng in [("static", static, None), *variants]:
         # explicit keys last: the static driver's ServeStats counts the
         # padded filler rows of a partial last batch as requests (it really
         # does dispatch them) — the row header reports the true queue size
@@ -208,12 +275,20 @@ def run(n_requests: int = 2000, slots: int = 4, new_tokens: int = 8,
                "prefix_frac": prefix_frac,
                "kv_block_size": kv_block_size,
                "parity_ok": True, **tuned}
+        if eng is not None:
+            rep = eng.report()
+            row["decode_path"] = rep["decode_path"]
+            row["decode_fallback"] = rep["decode_fallback"]
+            row["mesh_axes"] = rep["mesh_axes"]
+            row["serve_partition"] = rep["serve_partition"]
         rows.append(row)
-        print(f"  {driver:12s}: {d['generated_tokens']} tokens in "
+        path = f" [{row['decode_path']}]" if eng is not None else ""
+        print(f"  {driver:22s}: {d['generated_tokens']} tokens in "
               f"{d['wall_s']:.2f}s ({d['generated_tokens_per_s']:.1f} tok/s), "
               f"{d['step_dispatches']} dispatches, "
               f"p50/p99 {d['p50_latency_ms']:.0f}/{d['p99_latency_ms']:.0f}ms, "
-              f"util {d['slot_utilization']:.2f}")
+              f"ttft {d['ttft_p50_ms']:.0f}/{d['ttft_p99_ms']:.0f}ms, "
+              f"util {d['slot_utilization']:.2f}{path}")
     speedup = (static["wall_s"] / paged["wall_s"]) if paged["wall_s"] else 0.0
     waste = static["decode_slot_steps"] - paged["decode_slot_steps"]
     print(f"  paged engine removes {waste} padded decode slot-steps; "
@@ -243,18 +318,26 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-block-size", type=int, default=4)
     ap.add_argument("--kv-num-blocks", type=int, default=None,
                     help="paged pool size (default: slots * max_blocks)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="force N host devices and add an engine-sharded "
+                         "row served through a shard_map mesh")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="'model' extent of the --mesh (splits attention "
+                         "heads; N %% model-parallel must be 0)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: tiny arch, 2 slots, 6 ragged requests "
                          "with a shared-prefix mix")
     args = ap.parse_args(argv)
     if args.quick:
-        run(**QUICK_KWARGS)
+        run(**QUICK_KWARGS, mesh_devices=args.mesh,
+            model_parallel=args.model_parallel)
     else:
         run(n_requests=args.requests, slots=args.slots,
             new_tokens=args.new_tokens, arch=args.arch, mode=args.mode,
             prefix_frac=args.prefix_frac,
             kv_block_size=args.kv_block_size,
-            kv_num_blocks=args.kv_num_blocks)
+            kv_num_blocks=args.kv_num_blocks,
+            mesh_devices=args.mesh, model_parallel=args.model_parallel)
     return 0
 
 

@@ -27,6 +27,9 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--static", action="store_true",
                     help="run the static lock-step loop instead")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as the scheduler commits them "
+                         "(Engine.run(on_token=...))")
     args = ap.parse_args()
 
     sc = ServeConfig(arch=args.arch, mode=args.mode, batch=args.slots,
@@ -66,8 +69,19 @@ def main() -> None:
             temperature=args.temperature))
 
     engine = server.engine(slots=args.slots)
+    on_token = None
+    if args.stream:
+        # commit-order stream: tokens print the moment their scheduler
+        # tick lands, interleaved across whatever requests share the batch
+        def on_token(ev):
+            if ev.done:
+                print(f"  [stream] request {ev.request_id} done "
+                      f"({ev.completion.status})")
+            else:
+                print(f"  [stream] request {ev.request_id} "
+                      f"token[{ev.index}] = {ev.token}")
     t0 = time.time()
-    completions = engine.run(reqs)
+    completions = engine.run(reqs, on_token=on_token)
     dt = time.time() - t0
     s = engine.last_stats
     print(f"arch={args.arch} mode={args.mode} slots={args.slots}")

@@ -160,6 +160,18 @@ class RuntimeConfig:
     #            continuous-batching engine allocates blocks on demand
     kv_layout: str = "dense"           # 'dense' | 'paged'
     kv_block_size: int = 16            # tokens per KV block (paged layout)
+    # --- serving mesh placement -------------------------------------------
+    # Which mesh axes the engine's decode-cache plan may use when a mesh is
+    # passed to Server.engine(mesh=...): 'auto' takes whatever the plan can
+    # shard soundly (dense slots over "data", attention heads over "model";
+    # the paged pool never data-shards — replicated pools would diverge
+    # under per-shard scatter writes), or restrict with 'none' | 'data' |
+    # 'tensor' | 'both'.
+    serve_partition: str = "auto"
+    # Set by the engine *inside* its shard_map region only: the mesh axis
+    # attention output projections psum over when heads are tensor-sharded.
+    # None (the default everywhere else) means no collective is emitted.
+    tp_axis: str | None = None
     ssd_chunk: int = 64
     decode_block_k: int = 512
     attn_block_q: int = 128

@@ -426,6 +426,205 @@ def plan_segments(segments, shapes: Mapping[str, tuple[int, ...]],
     return PartitionPlan(axes=axes, partition=partition, segments=plans)
 
 
+# ---------------------------------------------------------------------------
+# Serving decode-cache planning (the engine's shard_map region).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeLeaf:
+    """One cache leaf's partition decision.
+
+    ``path`` is the "/"-joined pytree path; ``kind`` is ``"slot"`` (per-slot
+    state — dense KV columns, lengths, mamba conv/SSM state), ``"pool"``
+    (a physical block pool shared by every slot) or ``"opaque"`` (a leaf
+    with no ``CACHE_AXES`` declaration, always replicated); ``slot_dim`` /
+    ``model_dim`` are the resolved non-negative dim indices (None when the
+    leaf does not carry that extent).
+    """
+
+    path: str
+    kind: str
+    shape: tuple[int, ...]
+    spec: Any
+    slot_dim: int | None = None
+    model_dim: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeCachePlan:
+    """Partition of the engine's decode cache + step operands.
+
+    Built by :func:`plan_decode_cache` from the ``CACHE_AXES`` declarations
+    on the cache dataclasses (``layers.attention.KVCache`` /
+    ``PagedKVCache``, ``layers.mamba2.MambaCache``): each declares, per
+    field, which *negative* dim index carries the batch-slot extent and
+    which the KV-head extent, so one declaration covers both a bare node
+    and the engine's (L, ...)-stacked leaves.
+
+    ``use_data`` — slots shard over ``"data"``.  Sound only for the dense
+    layout: the paged pools have no slot dim (every slot scatters into one
+    shared pool), so data-sharding slots while each data shard holds a
+    pool replica would let the replicas diverge after the first scatter
+    write (the ``dist.serve-pool-write`` invariant).
+
+    ``use_model`` — KV-head dims shard over ``"model"`` (attention tensor
+    parallelism; the engine localizes ``cfg.n_heads`` inside the region
+    and the output projection psums over the axis).
+    """
+
+    axes: MeshAxes
+    partition: str
+    slots: int
+    use_data: bool
+    use_model: bool
+    leaves: tuple[DecodeLeaf, ...]
+    notes: tuple[str, ...] = ()
+
+    @property
+    def active(self) -> bool:
+        return self.use_data or self.use_model
+
+    def spec_tree(self, cache: Any) -> Any:
+        """A pytree of PartitionSpecs congruent with ``cache`` (the form
+        shard_map's in/out_specs take), rebuilt from the per-leaf plan."""
+        specs = {leaf.path: leaf.spec for leaf in self.leaves}
+
+        def build(node, path):
+            decl = getattr(type(node), "CACHE_AXES", None)
+            if decl is not None:
+                return type(node)(**{
+                    f: specs["/".join((*path, f))] for f in decl})
+            if isinstance(node, Mapping):
+                return {k: build(node[k], (*path, str(k))) for k in node}
+            if hasattr(node, "shape"):
+                return specs.get("/".join(path),
+                                 replicated(len(node.shape)))
+            raise TypeError(
+                f"unrecognized cache node at {'/'.join(path) or '<root>'}: "
+                f"{type(node).__name__}")
+
+        return build(cache, ())
+
+    def operand_spec(self, rank: int, *, slot_dim: int | None = 0) -> Any:
+        """Spec for one step operand: ``slot_dim`` (the per-slot batch dim)
+        shards over "data" exactly when the cache slots do; ``None`` means
+        the operand is slot-free (e.g. the RNG key) and replicates."""
+        parts: list = [None] * rank
+        if self.use_data and slot_dim is not None and rank:
+            parts[slot_dim] = DATA_AXIS
+        return _pspec(*parts)
+
+
+def _resolve_dim(decl_dim: int | None, rank: int) -> int | None:
+    if decl_dim is None:
+        return None
+    dim = decl_dim + rank if decl_dim < 0 else decl_dim
+    return dim if 0 <= dim < rank else None
+
+
+def plan_decode_cache(cache: Any, partition: str, axes: Any, *,
+                      slots: int,
+                      head_extents: tuple[int, ...] = ()) -> DecodeCachePlan:
+    """Derive the serving shard_map partition of a decode cache tree.
+
+    ``partition`` follows :data:`PARTITIONS` plus ``"auto"`` (take every
+    split that is sound); ``head_extents`` are extra extents that must
+    divide the "model" axis for tensor parallelism to engage (the engine
+    passes ``(cfg.n_heads, cfg.n_kv_heads)`` — the region-local config
+    localizes both).  Works on real caches and ``jax.eval_shape`` trees
+    alike (only ``.shape`` and the node types are consulted).  Like the
+    stack planner, anything that fails a soundness test is replicated
+    with a note, never mis-sharded.
+    """
+    axes = MeshAxes.from_mesh(axes)
+    if partition not in (*PARTITIONS, "auto"):
+        raise ValueError(f"unknown serve partition {partition!r}; allowed: "
+                         f"{(*PARTITIONS, 'auto')}")
+    eff = "both" if partition == "auto" else partition
+    n_data = data_extent(axes, eff)
+    n_model = model_extent(axes, eff)
+    notes: list[str] = []
+
+    raw: list[tuple[str, str, tuple[int, ...], int | None, int | None,
+                    bool]] = []
+
+    def walk(node, path):
+        decl = getattr(type(node), "CACHE_AXES", None)
+        if decl is not None:
+            for field, d in decl.items():
+                leaf = getattr(node, field)
+                shape = tuple(leaf.shape)
+                raw.append(("/".join((*path, field)),
+                            "pool" if d.get("pool") else "slot", shape,
+                            _resolve_dim(d.get("slot"), len(shape)),
+                            _resolve_dim(d.get("model"), len(shape)),
+                            bool(d.get("pool"))))
+            return
+        if isinstance(node, Mapping):
+            for k in node:
+                walk(node[k], (*path, str(k)))
+            return
+        if hasattr(node, "shape"):
+            raw.append(("/".join(path), "opaque", tuple(node.shape),
+                        None, None, False))
+            return
+        raise TypeError(
+            f"unrecognized cache node at {'/'.join(path) or '<root>'}: "
+            f"{type(node).__name__}")
+
+    walk(cache, ())
+
+    has_pool = any(is_pool for *_, is_pool in raw)
+    has_opaque = any(kind == "opaque" for _, kind, *_ in raw)
+
+    use_data = n_data > 1
+    if use_data and has_pool:
+        use_data = False
+        notes.append("slot split fenced: physical pool leaves are shared "
+                     "across slots (per-shard scatter writes into a "
+                     "replicated pool would diverge)")
+    if use_data and has_opaque:
+        use_data = False
+        notes.append("slot split fenced: cache holds leaves with no "
+                     "CACHE_AXES declaration")
+    if use_data and slots % n_data:
+        use_data = False
+        notes.append(f"slot split fenced: {slots} slots not divisible by "
+                     f"data={n_data}")
+    if use_data and any(
+            slot_dim is not None and shape[slot_dim] % n_data
+            for _, _, shape, slot_dim, _, _ in raw):
+        use_data = False
+        notes.append(f"slot split fenced: a slot dim does not divide "
+                     f"data={n_data}")
+
+    use_model = n_model > 1
+    if use_model and any(e % n_model for e in head_extents):
+        use_model = False
+        notes.append(f"head split fenced: head extents {head_extents} not "
+                     f"divisible by model={n_model}")
+    if use_model and any(
+            model_dim is not None and shape[model_dim] % n_model
+            for _, _, shape, _, model_dim, _ in raw):
+        use_model = False
+        notes.append(f"head split fenced: a KV-head dim does not divide "
+                     f"model={n_model}")
+
+    leaves = []
+    for path, kind, shape, slot_dim, model_dim, _ in raw:
+        parts: list = [None] * len(shape)
+        if use_data and slot_dim is not None:
+            parts[slot_dim] = DATA_AXIS
+        if use_model and model_dim is not None:
+            parts[model_dim] = MODEL_AXIS
+        leaves.append(DecodeLeaf(path=path, kind=kind, shape=shape,
+                                 spec=_pspec(*parts), slot_dim=slot_dim,
+                                 model_dim=model_dim))
+    return DecodeCachePlan(axes=axes, partition=eff, slots=slots,
+                           use_data=use_data, use_model=use_model,
+                           leaves=tuple(leaves), notes=tuple(notes))
+
+
 def batch_leaf_spec(shape: tuple[int, ...], partition: str,
                     axes: MeshAxes):
     """Placement spec for one input leaf of an optimized callable: shard

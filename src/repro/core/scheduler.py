@@ -76,6 +76,13 @@ class ServeStats:
     # --- request latency (queue wait + service, ok completions) -----------
     p50_latency_ms: float = 0.0
     p99_latency_ms: float = 0.0
+    # --- time to first token (admission wait + prefill, streaming) --------
+    # Stamped from the same one-timestamp-per-tick clock as the latency
+    # percentiles: a request's first generated token commits in some tick,
+    # and the next tick's shared timestamp (or the final clock read at run
+    # end) closes its TTFT window.
+    ttft_p50_ms: float = 0.0
+    ttft_p99_ms: float = 0.0
 
     @property
     def total_tokens(self) -> int:

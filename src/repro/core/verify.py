@@ -184,6 +184,17 @@ INVARIANTS: dict[str, tuple[str, str]] = {
         "no committed spec shards a dim its region reduces over (norm / "
         "softmax feature axes, attention key sequence, the vocab-CE "
         "log-sum-exp) — a split that would need an in-kernel collective"),
+    "dist.serve-slot-axis": (
+        "src/repro/core/partition.py",
+        "every slot-bearing decode-cache leaf shards its slot dim over the "
+        "same mesh axes as every other (and as the step operands) — a slot "
+        "split applied to only part of the per-slot state desynchronizes "
+        "the shards"),
+    "dist.serve-pool-write": (
+        "src/repro/core/partition.py",
+        "no physical-pool decode-cache leaf shards over the batch/data "
+        "axis: the pool is shared by every slot, so per-shard scatter "
+        "writes into slot-partitioned replicas would diverge"),
 }
 
 
@@ -1412,4 +1423,64 @@ def check_block_tables(state: BlockTableState) -> list[Finding]:
                 "kv.freed-reachable", "error", f"block[{b}]",
                 f"freed block still reachable from {derived[b]} "
                 f"table/cache reference(s)"))
+    return fs
+
+
+# ---------------------------------------------------------------------------
+# (7) Serving decode-cache partition soundness (``dist.serve-*``).
+# ---------------------------------------------------------------------------
+
+def check_decode_plan(plan: Any) -> list[Finding]:
+    """Re-derive the soundness of a serving :class:`~repro.core.partition.
+    DecodeCachePlan` independently of the planner that committed it.
+
+    * ``dist.spec-rank`` / ``dist.mesh-axis`` — every leaf's committed
+      spec against its recorded shape and the mesh (same structural checks
+      as the training-side partitions).
+    * ``dist.serve-pool-write`` — a physical pool leaf must never shard
+      over the data axis; the pool is written by *every* slot's scatter,
+      so slot-partitioned shards each holding a pool replica would
+      diverge after the first tick.
+    * ``dist.serve-slot-axis`` — all slot-bearing leaves shard their slot
+      dim over the same axis set; splitting some per-slot state while
+      replicating the rest desynchronizes the shards.
+    """
+    from repro.core.partition import DATA_AXIS
+
+    axes = plan.axes
+    fs: list[Finding] = []
+    slot_axes: dict[str, tuple] = {}
+    for leaf in plan.leaves:
+        fs.extend(_check_one_spec(leaf.path, leaf.spec, leaf.shape, axes,
+                                  "decode-cache"))
+        entries = _spec_entries(leaf.spec)
+
+        def _axes_at(dim: int | None) -> tuple:
+            if dim is None or dim >= len(entries) or entries[dim] is None:
+                return ()
+            e = entries[dim]
+            return tuple(e) if isinstance(e, tuple) else (e,)
+
+        if leaf.kind == "pool":
+            named = {a for i in range(len(entries)) for a in _axes_at(i)}
+            if DATA_AXIS in named:
+                fs.append(Finding(
+                    "dist.serve-pool-write", "error", leaf.path,
+                    f"spec {leaf.spec} shards a shared physical pool over "
+                    f"the batch axis {DATA_AXIS!r}; per-shard scatter "
+                    f"writes would diverge between the pool replicas"))
+        if leaf.slot_dim is not None:
+            slot_axes[leaf.path] = _axes_at(leaf.slot_dim)
+    if slot_axes:
+        counts: dict[tuple, int] = {}
+        for got in slot_axes.values():
+            counts[got] = counts.get(got, 0) + 1
+        majority = max(counts, key=lambda k: counts[k])
+        for path, got in sorted(slot_axes.items()):
+            if got != majority:
+                fs.append(Finding(
+                    "dist.serve-slot-axis", "error", path,
+                    f"slot dim shards over {got or '(replicated)'} while "
+                    f"the rest of the per-slot state uses "
+                    f"{majority or '(replicated)'}"))
     return fs

@@ -145,17 +145,44 @@ def cache_spec(cache: Any, mesh: Mesh) -> Any:
     over model (flash-decode with sequence-parallel KV: each model shard
     scores its slice of the cache, the softmax statistics and the (B,H,hd)
     partial outputs reduce over model — MBs instead of gathering the cache).
-    Cache layouts (see layers):
+
+    Cache dataclasses that declare ``CACHE_AXES`` (KVCache / PagedKVCache /
+    MambaCache — the protocol ``core.partition.plan_decode_cache`` consumes)
+    are sharded from their declaration: the slot dim over the data axes,
+    a declared KV-head dim over "model" when divisible, and pool leaves
+    never over the batch axes (shared physical blocks — per-shard scatter
+    writes into slot-partitioned replicas would diverge).  Plain trees
+    fall back to the shape heuristics:
       KV k/v   : (layers, B, G, S, hd)  -> (None, data, None, model, None)
       KV length: (layers, B)            -> (None, data)
       Mamba conv : (layers, B, cw-1, C) -> (None, data, None, model)
       Mamba state: (layers, B, H, N, P) -> (None, data, model, None, None)
-    The kv-head dim G is deliberately not model-sharded: assigned archs
-    have G in {1, 8, 32} against a 16-way model axis (non-divisible), and
-    the sequence dim is where decode's memory roofline lives."""
+    The kv-head dim G is deliberately not model-sharded on the heuristic
+    path: assigned archs have G in {1, 8, 32} against a 16-way model axis
+    (non-divisible), and the sequence dim is where decode's memory
+    roofline lives."""
     ax = batch_axes(mesh)
 
     model = mesh.shape.get("model", 1) if hasattr(mesh, "shape") else 1
+
+    def declared_spec(x, decl):
+        rank = x.ndim
+        parts: list = [None] * rank
+        slot = decl.get("slot")
+        if slot is not None and not decl.get("pool"):
+            parts[slot % rank] = ax
+        md = decl.get("model")
+        if (md is not None and model > 1
+                and x.shape[md % rank] % model == 0):
+            parts[md % rank] = "model"
+        return P(*parts)
+
+    def node_spec(node):
+        decl = getattr(type(node), "CACHE_AXES", None)
+        if decl is None:
+            return jax.tree_util.tree_map(leaf_spec, node)
+        return type(node)(**{
+            f: declared_spec(getattr(node, f), d) for f, d in decl.items()})
 
     def leaf_spec(x):
         if x.ndim == 5:
@@ -170,4 +197,6 @@ def cache_spec(cache: Any, mesh: Mesh) -> Any:
             return P(None, ax)
         return P(*([None] * x.ndim))
 
-    return jax.tree_util.tree_map(leaf_spec, cache)
+    return jax.tree_util.tree_map(
+        node_spec, cache,
+        is_leaf=lambda n: getattr(type(n), "CACHE_AXES", None) is not None)

@@ -142,7 +142,12 @@ def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     lens = lengths.reshape(b, 1).astype(jnp.int32)
-    table = table.astype(jnp.int32)
+    # Unmapped tail entries are masked by position before they touch the
+    # softmax, but they still drive the BlockSpec index maps — clamp into
+    # the pool so an allocator sentinel (e.g. ``n`` for "no block") can
+    # never index out of bounds.  This is what lets the serving engine pass
+    # its table operand through unfiltered.
+    table = jnp.clip(table.astype(jnp.int32), 0, n - 1)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

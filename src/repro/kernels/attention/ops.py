@@ -8,6 +8,17 @@ import jax
 from repro.kernels.attention import decode as decode_mod
 from repro.kernels.attention import flash as flash_mod
 from repro.kernels.attention import ref as ref_mod
+from repro.kernels.fused_stack.ops import DispatchStats
+
+#: Trace-time decode-dispatch counters (same snapshot/delta protocol as
+#: the fused-stack STATS): which decode path a compilation took — the
+#: pallas flash kernels or the jnp reference.  Recorded at the dispatch
+#: sites in :mod:`repro.layers.attention`; the serve engine diffs these
+#: around a run so report() can prove ``mode="brainslug"`` serving
+#: actually compiled ``paged_flash_decode`` (and name the fallback
+#: otherwise).
+STATS = DispatchStats(keys=("decode_pallas", "decode_ref",
+                            "paged_decode_pallas", "paged_decode_ref"))
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))

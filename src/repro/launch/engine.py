@@ -41,6 +41,17 @@ KV memory comes in two layouts (``RuntimeConfig.kv_layout``):
   a shared block is copy-on-write — the write barrier forks it onto a
   fresh block (``lm.copy_blocks``) before any dispatch may write it.
 
+**Scale-out and streaming.**  ``Engine(..., mesh=...)`` wraps the one
+jitted mixed step in a shard_map region planned by
+:func:`repro.core.partition.plan_decode_cache`: dense-layout slots shard
+over the "data" axis (purely per-slot compute — bitwise identical to the
+single-device step), attention heads over "model" (the out-projection
+psums; see ``layers.attention``), and the paged pool never data-shards
+(its scatter writes are shared across slots).  ``Engine.stream`` /
+``Engine.run(on_token=...)`` surface :class:`TokenEvent`\\ s as the
+scheduler tick commits tokens, so callers observe generations in commit
+order instead of waiting for the run to drain.
+
 Dispatch accounting lives in two places: ``STATS`` (a runtime-keyed
 :class:`~repro.kernels.fused_stack.ops.DispatchStats`, snapshot/delta
 protocol) and the per-run :class:`~repro.core.scheduler.ServeStats`
@@ -53,15 +64,17 @@ import functools
 import hashlib
 import heapq
 import time
-from typing import Sequence
+from typing import Any, Callable, Iterator, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, RuntimeConfig
+from repro.core import partition as partition_mod
 from repro.core import verify
 from repro.core.scheduler import ServeStats
+from repro.kernels.attention import ops as attn_ops
 from repro.kernels.fused_stack.ops import DispatchStats
 from repro.models import lm
 
@@ -83,13 +96,19 @@ class Request:
     queue wait: a request still waiting for a slot past its deadline
     completes with status ``'timeout'`` instead of holding its caller
     forever behind a long queue.  ``priority`` orders admission: higher
-    pops first, ties fall back to submission order (FIFO)."""
+    pops first, ties fall back to submission order (FIFO).  ``on_token``
+    is an optional per-request streaming callback: it fires with each of
+    this request's :class:`TokenEvent`\\ s as the scheduler commits them
+    (identity-only for hashing/eq — callbacks never change what a request
+    *is*)."""
     request_id: int
     prompt: Sequence[int]
     max_new_tokens: int
     temperature: float = 0.0
     deadline_ms: float | None = None
     priority: int = 0
+    on_token: Callable[["TokenEvent"], None] | None = dataclasses.field(
+        default=None, compare=False, repr=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +123,24 @@ class Completion:
     tokens: np.ndarray          # (max_new_tokens,) int32
     status: str = "ok"          # 'ok' | 'invalid' | 'timeout' | 'error'
     reason: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One streamed serving event (``Engine.stream`` / ``run(on_token=)``).
+
+    Token events (``done=False``) carry the ``index``-th generated token
+    of their request, in commit order — the order the scheduler tick
+    committed them, interleaved across whatever requests shared the
+    batch.  The terminal event (``done=True``, ``token=None``) carries
+    the request's :class:`Completion`; every request gets exactly one,
+    including invalid / timed-out / errored requests (zero token events,
+    then the terminal with the failure status)."""
+    request_id: int
+    token: int | None
+    index: int
+    done: bool = False
+    completion: Completion | None = None
 
 
 @dataclasses.dataclass
@@ -295,13 +332,29 @@ class PrefixCache:
         self._order.clear()
 
 
-@functools.lru_cache(maxsize=None)
-def _jitted_mixed_step(cfg: ModelConfig, rt: RuntimeConfig):
-    """One jitted mixed prefill/decode step, cached per (cfg, rt) so every
-    Engine over the same model shares one trace cache (the step depends on
-    the token-window *shape*, not on any per-engine state).  The paged
-    variant takes the block tables as an extra operand — host-side
-    mapping state, not cache state, so it is never donated."""
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """Version-compat shard_map (graduated from jax.experimental; the
+    replication-checker kwarg was renamed along the way).  The checker is
+    off: pallas calls inside the region have no replication rule."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return sm(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    raise TypeError("no compatible shard_map signature found")
+
+
+def _mixed_step_fn(cfg: ModelConfig, rt: RuntimeConfig):
+    """The raw mixed prefill/decode step for (cfg, rt) — what
+    :func:`_jitted_mixed_step` jits directly and what a mesh-backed Engine
+    wraps in its shard_map region first (with the head-localized config;
+    see ``Engine._build_sharded_step``).  The paged variant takes the
+    block tables as an extra operand — host-side mapping state, not cache
+    state, so it is never donated."""
     vocab = cfg.vocab_size
     paged = rt.kv_layout == "paged"
 
@@ -346,12 +399,19 @@ def _jitted_mixed_step(cfg: ModelConfig, rt: RuntimeConfig):
                        base_key):
             return mixed_step(params, cache, None, tokens, counts, rids,
                               tidx, temps, base_key)
-        # the cache is donated: run() rebinds it from the step's return,
-        # and in place the per-slot where-select KV write stays a masked
-        # update instead of a full cache copy per token (no-op warning on
-        # CPU)
-        return jax.jit(dense_step, donate_argnums=(1,))
-    return jax.jit(mixed_step, donate_argnums=(1,))
+        return dense_step
+    return mixed_step
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_mixed_step(cfg: ModelConfig, rt: RuntimeConfig):
+    """One jitted mixed prefill/decode step, cached per (cfg, rt) so every
+    Engine over the same model shares one trace cache (the step depends on
+    the token-window *shape*, not on any per-engine state).  The cache is
+    donated: run() rebinds it from the step's return, and in place the
+    per-slot where-select KV write stays a masked update instead of a full
+    cache copy per token (no-op warning on CPU)."""
+    return jax.jit(_mixed_step_fn(cfg, rt), donate_argnums=(1,))
 
 
 # Slot recycling rewrites one batch column of every cache leaf; donating
@@ -381,12 +441,20 @@ class Engine:
     invariants (:func:`repro.core.verify.check_block_tables`) every tick:
     ``"warn"`` (default) emits warnings, ``"strict"`` raises, ``"off"``
     skips the check.
+
+    ``mesh`` plugs the engine into a device mesh: the mixed step runs in
+    a shard_map region planned by
+    :func:`repro.core.partition.plan_decode_cache` (restrict which axes
+    it may use with ``rt.serve_partition``), the plan is checked by the
+    ``dist.serve-*`` invariants under the same ``verify_mode``, and
+    :meth:`report` records the committed placement.
     """
 
     def __init__(self, cfg: ModelConfig, params, rt: RuntimeConfig, *,
                  slots: int, max_len: int, prefill_chunk: int = 8,
                  seed: int = 0, kv_num_blocks: int | None = None,
-                 prefix_sharing: bool = True, verify_mode: str = "warn"):
+                 prefix_sharing: bool = True, verify_mode: str = "warn",
+                 mesh=None):
         if not cfg.supports_decode:
             raise ValueError(f"{cfg.name} is encoder-only; no decode path")
         if slots < 1:
@@ -431,10 +499,120 @@ class Engine:
         self.last_allocator: BlockAllocator | None = None
         self.last_prefix_cache: PrefixCache | None = None
         self.last_admission_order: list[int] = []
+        self.last_attn_dispatch: dict[str, int] | None = None
         self._n_runs = 0
-        self._step = _jitted_mixed_step(cfg, rt)
+        self.mesh = mesh
+        self.decode_plan: partition_mod.DecodeCachePlan | None = None
+        self._model_extent = 1
+        if mesh is None:
+            self._step = _jitted_mixed_step(cfg, rt)
+        else:
+            self._step = self._build_sharded_step(mesh)
         self._reset = _jitted_reset
         self._copy = _jitted_copy
+
+    def _build_sharded_step(self, mesh):
+        """Plan the decode-cache partition, verify it, localize the config
+        for tensor-sharded heads, commit the params, and return the jitted
+        shard_map-wrapped mixed step.
+
+        ``jit(shard_map(...))`` auto-reshards the per-tick host operands
+        (tokens/counts/tables) against the in_specs; the cache stays
+        committed to its plan sharding across ticks because the step's
+        out_specs (and the GSPMD-propagated reset/copy) reproduce it."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        axes = partition_mod.MeshAxes.from_mesh(mesh)
+        cache_shapes = jax.eval_shape(
+            lambda: lm.init_decode_cache(
+                self.cfg, self.slots, self.max_len, dtype=jnp.float32,
+                kv_layout=self.kv_layout,
+                kv_num_blocks=self.kv_num_blocks,
+                kv_block_size=self.block_size))
+        plan = partition_mod.plan_decode_cache(
+            cache_shapes, self.rt.serve_partition, axes, slots=self.slots,
+            head_extents=(self.cfg.n_heads, self.cfg.n_kv_heads))
+        if self.verify_mode != "off":
+            verify.enforce(verify.check_decode_plan(plan),
+                           self.verify_mode, subject="serve decode plan")
+        self.decode_plan = plan
+        m = (axes.extent(partition_mod.MODEL_AXIS) if plan.use_model
+             else 1)
+        self._model_extent = m
+        cfg_local = lm.tp_local_config(self.cfg, m)
+        rt_local = (dataclasses.replace(self.rt,
+                                        tp_axis=partition_mod.MODEL_AXIS)
+                    if m > 1 else self.rt)
+        pspecs = lm.tp_param_specs(self.params, m)
+        # commit the (possibly head-sharded) params once instead of
+        # re-sharding them on every dispatch
+        self.params = jax.device_put(
+            self.params,
+            jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), pspecs,
+                is_leaf=lambda x: isinstance(x, P)))
+        cspecs = plan.spec_tree(cache_shapes)
+        vec = plan.operand_spec(1)
+        in_specs: list = [pspecs, cspecs]
+        if self.kv_layout == "paged":
+            in_specs.append(P(None, None))  # host block tables, replicated
+        in_specs += [plan.operand_spec(2), vec, vec, vec, vec, P(None)]
+        raw = _mixed_step_fn(cfg_local, rt_local)
+        return jax.jit(
+            _shard_map(raw, mesh, in_specs=tuple(in_specs),
+                       out_specs=(vec, cspecs)),
+            donate_argnums=(1,))
+
+    def report(self) -> dict:
+        """Serving placement + dispatch summary for the last run: which
+        decode path compiled (pallas fast path vs jnp reference, with the
+        fallback reason), the mesh placement the plan committed, and the
+        engine/attention dispatch deltas.  Trace-time counters only move
+        when a compilation happens, so a warm trace cache reports the
+        mode's static dispatch with a note instead of zeros."""
+        attn = dict(self.last_attn_dispatch or {})
+        paged = self.kv_layout == "paged"
+        pallas_key = "paged_decode_pallas" if paged else "decode_pallas"
+        ref_key = "paged_decode_ref" if paged else "decode_ref"
+        pallas_path = ("pallas-paged-decode" if paged
+                       else "pallas-flash-decode")
+        ref_path = "ref-paged-decode" if paged else "ref-decode"
+        fallback = None
+        if attn.get(pallas_key):
+            path = pallas_path
+        elif attn.get(ref_key):
+            path = ref_path
+            fallback = (f"mode={self.rt.mode!r} compiles the jnp "
+                        f"reference decode; pallas is the "
+                        f"mode='brainslug' fast path")
+        elif self.cfg.family == "ssm":
+            path = "ssm-recurrent"
+            fallback = "no attention layers: nothing to flash-decode"
+        elif self.rt.mode == "brainslug":
+            path = pallas_path
+            fallback = None if self.last_attn_dispatch else \
+                "trace cache warm: inferred from mode, not recorded"
+        else:
+            path = ref_path
+            fallback = (f"mode={self.rt.mode!r} compiles the jnp "
+                        f"reference decode; pallas is the "
+                        f"mode='brainslug' fast path")
+        plan = self.decode_plan
+        from repro.launch import mesh as mesh_launch
+        return {
+            "mode": self.rt.mode,
+            "kv_layout": self.kv_layout,
+            "decode_path": path,
+            "decode_fallback": fallback,
+            "mesh_axes": mesh_launch.axis_extents(self.mesh),
+            "serve_partition": ({"partition": plan.partition,
+                                 "data": plan.use_data,
+                                 "model": plan.use_model,
+                                 "notes": list(plan.notes)}
+                                if plan is not None else {}),
+            "dispatch": dict(self.last_dispatch or {}),
+            "attn_dispatch": attn,
+        }
 
     # -- admission ----------------------------------------------------------
 
@@ -480,16 +658,46 @@ class Engine:
     # -- main loop ----------------------------------------------------------
 
     def run(self, requests: Sequence[Request],
-            key: jnp.ndarray | None = None) -> list[Completion]:
+            key: jnp.ndarray | None = None, *,
+            on_token: Callable[[TokenEvent], None] | None = None
+            ) -> list[Completion]:
         """Serve every request to completion; returns completions in
         submission order.  ``key`` overrides the per-run RNG key (default:
         ``fold_in(PRNGKey(seed), run_counter)`` so repeated runs with
         temperature sampling draw fresh streams).
 
+        ``on_token`` streams the run: it fires with every
+        :class:`TokenEvent` as the scheduler commits it (after any
+        per-request ``Request.on_token``), so callers observe tokens in
+        commit order while the same completions are still returned in
+        submission order at the end.
+
         Error isolation is per request: a validation failure yields a
         ``status='invalid'`` Completion for that request and the rest of
         the queue is served normally — ``run()`` only raises for engine
         misconfiguration, never for one bad request."""
+        it = self._serve(requests, key)
+        while True:
+            try:
+                ev = next(it)
+            except StopIteration as stop:
+                return stop.value
+            if on_token is not None:
+                on_token(ev)
+
+    def stream(self, requests: Sequence[Request],
+               key: jnp.ndarray | None = None) -> Iterator[TokenEvent]:
+        """Generator form of :meth:`run`: yields every :class:`TokenEvent`
+        in commit order.  Each request's terminal event carries its
+        :class:`Completion`; per-run stats land on :attr:`last_stats` once
+        the generator is exhausted."""
+        yield from self._serve(requests, key)
+
+    def _serve(self, requests: Sequence[Request],
+               key: jnp.ndarray | None) -> Any:
+        """The scheduler loop as a generator: yields TokenEvents at every
+        commit point, returns the submission-ordered completions (the
+        generator's StopIteration value, unwrapped by :meth:`run`)."""
         if key is None:
             key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
                                      self._n_runs)
@@ -499,11 +707,21 @@ class Engine:
         # (the static-vs-engine benchmark compares per-run decode
         # slot-steps) — snapshot here, delta at the end.
         stats_before = STATS.snapshot()
+        attn_before = attn_ops.STATS.snapshot()
 
         B, C, bs = self.slots, self.prefill_chunk, self.block_size
         paged = self.kv_layout == "paged"
         completions: list[Completion | None] = [None] * len(requests)
         stats = ServeStats(n_requests=len(requests), n_slots=B)
+        events: list[TokenEvent] = []
+
+        def emit(req: Request, ev: TokenEvent) -> None:
+            # per-request callbacks fire at commit, before the global
+            # stream sees the event
+            if req.on_token is not None:
+                req.on_token(ev)
+            events.append(ev)
+
         # admission order: highest priority first, FIFO within a priority
         # band (the submission index is the tiebreak, so equal-priority
         # entries pop in submission order and Requests never compare)
@@ -518,6 +736,11 @@ class Engine:
                     tokens=np.zeros(0, np.int32), status="invalid",
                     reason=str(e))
                 stats.failed += 1
+                emit(r, TokenEvent(r.request_id, None, 0, True,
+                                   completions[i]))
+        for ev in events:
+            yield ev
+        events.clear()
         slot: list[_Slot | None] = [None] * B
         dirty = [False] * B             # slot held a previous request
         # plain list, not an ndarray: the mask handed to the jitted reset
@@ -540,6 +763,9 @@ class Engine:
         latencies: list[float] = []
         n_latency_pending = 0   # ok-completions awaiting the next tick's
         # clock read (one timestamp per tick; see `now` below)
+        ttfts: list[float] = []
+        n_ttft_pending = 0      # first-token commits awaiting that same
+        # shared clock read (TTFT = admission wait + prefill)
         if paged:
             cache = lm.init_decode_cache(
                 self.cfg, B, self.max_len, dtype=jnp.float32,
@@ -557,6 +783,8 @@ class Engine:
                 tokens=np.asarray(gen, np.int32))
             stats.completed += 1
             n_latency_pending += 1
+            emit(req, TokenEvent(req.request_id, None, len(gen), True,
+                                 completions[s_idx]))
 
         def try_map(prompt: np.ndarray, max_new: int):
             """Prefix-map and block-gate one request.  Returns ``(blocks,
@@ -632,6 +860,7 @@ class Engine:
             tables[b, :] = 0
 
         def admit(now: float) -> None:
+            nonlocal n_ttft_pending
             for b in range(B):
                 while slot[b] is None and heap:
                     entry = heapq.heappop(heap)
@@ -647,6 +876,8 @@ class Engine:
                             reason=(f"queued {waited_ms:.1f}ms, past the "
                                     f"{req.deadline_ms:.1f}ms deadline"))
                         stats.timed_out += 1
+                        emit(req, TokenEvent(req.request_id, None, 0, True,
+                                             completions[idx]))
                         continue
                     # max_new == 0 completes at admission without touching
                     # KV; everything else gates on its worst-case blocks
@@ -678,11 +909,15 @@ class Engine:
                                 status="error",
                                 reason=f"{type(e).__name__}: {e}")
                             stats.failed += 1
+                            emit(req, TokenEvent(req.request_id, None, 0,
+                                                 True, completions[idx]))
                             if mapping is not None:
                                 unmap(mapping)
                             continue
                         gen = [tok0]
                         stats.generated_tokens += 1
+                        n_ttft_pending += 1
+                        emit(req, TokenEvent(req.request_id, tok0, 0))
                         if req.max_new_tokens == 1:
                             complete(idx, req, prompt, gen)
                             continue
@@ -720,7 +955,13 @@ class Engine:
             if n_latency_pending:
                 latencies.extend([(now - t0) * 1e3] * n_latency_pending)
                 n_latency_pending = 0
+            if n_ttft_pending:
+                ttfts.extend([(now - t0) * 1e3] * n_ttft_pending)
+                n_ttft_pending = 0
             admit(now)
+            for ev in events:
+                yield ev
+            events.clear()
             if any(pending_reset):
                 # jitted per-slot cache clear: freed slots restart at
                 # length 0 / zero SSM state before their new request's
@@ -859,6 +1100,10 @@ class Engine:
                 s.gen.append(tok)
                 s.last = tok
                 stats.generated_tokens += 1
+                if len(s.gen) == 1:
+                    n_ttft_pending += 1
+                emit(s.req, TokenEvent(s.req.request_id, tok,
+                                       len(s.gen) - 1))
                 if len(s.gen) >= s.req.max_new_tokens:
                     complete(s.idx, s.req, s.prompt, s.gen)
                     if paged:
@@ -875,13 +1120,27 @@ class Engine:
                 util_acc += live / (B * self.max_len)
                 util_n += 1
 
+            # the tick's commits are final: stream them before the next
+            # dispatch so a consumer never waits on future batch-mates
+            for ev in events:
+                yield ev
+            events.clear()
+
         end = time.perf_counter()
+        for ev in events:
+            yield ev
+        events.clear()
         if n_latency_pending:
             latencies.extend([(end - t0) * 1e3] * n_latency_pending)
+        if n_ttft_pending:
+            ttfts.extend([(end - t0) * 1e3] * n_ttft_pending)
         stats.wall_s = end - t0
         if latencies:
             stats.p50_latency_ms = float(np.percentile(latencies, 50))
             stats.p99_latency_ms = float(np.percentile(latencies, 99))
+        if ttfts:
+            stats.ttft_p50_ms = float(np.percentile(ttfts, 50))
+            stats.ttft_p99_ms = float(np.percentile(ttfts, 99))
         stats.kv_block_utilization = (util_acc / util_n) if util_n else 0.0
         if paged:
             if prefix is not None:
@@ -891,4 +1150,5 @@ class Engine:
             stats.blocks_in_use = alloc.peak_in_use
         self.last_stats = stats
         self.last_dispatch = STATS.delta(stats_before)
+        self.last_attn_dispatch = attn_ops.STATS.delta(attn_before)
         return completions  # type: ignore[return-value]

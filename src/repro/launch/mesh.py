@@ -51,6 +51,16 @@ def make_host_mesh() -> Mesh:
         return _make_mesh((1, 1), ("data", "model"), devices=devs[:1])
 
 
+def axis_extents(mesh: Mesh | None) -> dict[str, int]:
+    """``{axis name: extent}`` of a mesh, ``{}`` for ``None`` — the form
+    engine/benchmark report rows record (JSON-friendly, no device objects).
+    """
+    if mesh is None:
+        return {}
+    return {str(name): int(extent)
+            for name, extent in zip(mesh.axis_names, mesh.devices.shape)}
+
+
 def make_test_mesh(n: int = 8, *, model_parallel: int = 1) -> Mesh:
     """Mesh of ``n`` forced host devices for multi-device CPU testing.
 

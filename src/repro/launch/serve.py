@@ -109,29 +109,39 @@ class Server:
                kv_block_size: int | None = None,
                kv_num_blocks: int | None = None,
                prefix_sharing: bool = True,
-               verify_mode: str = "warn") -> engine_mod.Engine:
+               verify_mode: str = "warn", mesh=None,
+               serve_partition: str | None = None) -> engine_mod.Engine:
         """A continuous-batching :class:`~repro.launch.engine.Engine` over
         this server's params/config (``slots`` defaults to the static
         batch width; the cache budget is the same ``max_len``).
 
         ``kv_layout``/``kv_block_size`` override the runtime config's KV
         cache layout for this engine (``"paged"`` swaps the dense per-slot
-        reservation for the block pool; see ``launch/engine.py``); the
-        remaining knobs pass through to the Engine."""
+        reservation for the block pool; see ``launch/engine.py``).
+        ``mesh`` runs the engine's mixed step in a shard_map region over a
+        device mesh (``launch.mesh.make_test_mesh`` /
+        ``make_production_mesh``); ``serve_partition`` restricts which
+        mesh axes the decode-cache plan may use (``'auto'`` | ``'none'`` |
+        ``'data'`` | ``'tensor'`` | ``'both'``).  The remaining knobs pass
+        through to the Engine."""
         rt = self.rt
-        if kv_layout is not None or kv_block_size is not None:
+        if (kv_layout is not None or kv_block_size is not None
+                or serve_partition is not None):
             rt = dataclasses.replace(
                 rt,
                 kv_layout=rt.kv_layout if kv_layout is None else kv_layout,
                 kv_block_size=(rt.kv_block_size if kv_block_size is None
-                               else kv_block_size))
+                               else kv_block_size),
+                serve_partition=(rt.serve_partition
+                                 if serve_partition is None
+                                 else serve_partition))
         return engine_mod.Engine(
             self.cfg, self.params, rt,
             slots=self.sc.batch if slots is None else slots,
             max_len=self.sc.max_len, prefill_chunk=prefill_chunk,
             seed=self.sc.seed if seed is None else seed,
             kv_num_blocks=kv_num_blocks, prefix_sharing=prefix_sharing,
-            verify_mode=verify_mode)
+            verify_mode=verify_mode, mesh=mesh)
 
     def prefill(self, tokens: jnp.ndarray) -> tuple[Any, jnp.ndarray]:
         """Ingest the prompt (cache-building prefill) in a single jitted

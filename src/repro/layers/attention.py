@@ -204,6 +204,16 @@ class KVCache:
     v: jnp.ndarray
     length: jnp.ndarray     # (B,) int32
 
+    #: Decode-cache sharding declaration consumed by
+    #: ``repro.core.partition.plan_decode_cache``: per field, which
+    #: *negative* dim index carries the batch-slot extent ("slot") and
+    #: which carries the KV-head extent ("model").  Negative indexing is
+    #: what keeps one declaration valid for both a bare per-layer node and
+    #: the engine's (L, ...)-stacked cache leaves.
+    CACHE_AXES = {"k": {"slot": -4, "model": -3},
+                  "v": {"slot": -4, "model": -3},
+                  "length": {"slot": -1}}
+
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16) -> KVCache:
@@ -226,6 +236,15 @@ class PagedKVCache:
     k_pool: jnp.ndarray     # (N, G, block_size, hd) physical blocks
     v_pool: jnp.ndarray
     length: jnp.ndarray     # (B,) int32 logical positions per slot
+
+    #: Like :attr:`KVCache.CACHE_AXES`, but the pools have *no* slot dim —
+    #: every slot scatters into one shared physical pool.  ``pool: True``
+    #: tells the planner the leaf must never shard over the batch axis:
+    #: data-sharding slots while each shard holds a full pool replica
+    #: would let the per-shard scatter writes diverge between replicas.
+    CACHE_AXES = {"k_pool": {"model": -3, "pool": True},
+                  "v_pool": {"model": -3, "pool": True},
+                  "length": {"slot": -1}}
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
@@ -269,15 +288,22 @@ def _decode_paged(params, x_t: jnp.ndarray, cache: PagedKVCache,
     lengths = cache.length + adv
     new_cache = PagedKVCache(k_pool=k_pool, v_pool=v_pool, length=lengths)
     if rt.mode == "brainslug":
+        attn_ops.STATS.record("paged_decode_pallas")
         o = attn_ops.paged_flash_decode(
             q, k_pool.astype(q.dtype), v_pool.astype(q.dtype), table,
             lengths, interpret=rt.interpret)
     else:
+        attn_ops.STATS.record("paged_decode_ref")
         o = attn_ref.paged_decode_ref(
             q, k_pool.astype(q.dtype), v_pool.astype(q.dtype), table,
             lengths)
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
-    return jnp.einsum("bsk,kd->bsd", o, params["wo"]), new_cache
+    out = jnp.einsum("bsk,kd->bsd", o, params["wo"])
+    if rt.tp_axis:
+        # heads are tensor-sharded: each shard computed a partial row-slice
+        # product against its wo rows; the sum over shards is the output
+        out = jax.lax.psum(out, rt.tp_axis)
+    return out, new_cache
 
 
 def decode(params, x_t: jnp.ndarray, cache, cfg: ModelConfig,
@@ -323,14 +349,19 @@ def decode(params, x_t: jnp.ndarray, cache, cfg: ModelConfig,
     lengths = cache.length + adv
     new_cache = KVCache(k=k, v=v, length=lengths)
     if rt.mode == "brainslug":
+        attn_ops.STATS.record("decode_pallas")
         o = attn_ops.flash_decode(q, k.astype(q.dtype), v.astype(q.dtype),
                                   lengths, block_k=rt.decode_block_k,
                                   interpret=rt.interpret)
     else:
+        attn_ops.STATS.record("decode_ref")
         o = attn_ref.decode_ref(q, k.astype(q.dtype), v.astype(q.dtype),
                                 lengths)
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
-    return jnp.einsum("bsk,kd->bsd", o, params["wo"]), new_cache
+    out = jnp.einsum("bsk,kd->bsd", o, params["wo"])
+    if rt.tp_axis:
+        out = jax.lax.psum(out, rt.tp_axis)
+    return out, new_cache
 
 
 jax.tree_util.register_dataclass(

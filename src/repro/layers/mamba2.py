@@ -118,6 +118,13 @@ class MambaCache:
     conv: jnp.ndarray       # (B, cw-1, di + 2n): rolling pre-conv inputs
     state: jnp.ndarray      # (B, H, N, P) f32 SSM state
 
+    #: Decode-cache sharding declaration (see ``KVCache.CACHE_AXES``):
+    #: recurrent state is purely per-slot, so only the slot dim shards.
+    #: No "model" entry on purpose — the mixer's gated RMSNorm reduces
+    #: over the full d_inner, so head-sharding the state would put a
+    #: collective inside the norm (the dist.collective-placement fence).
+    CACHE_AXES = {"conv": {"slot": -3}, "state": {"slot": -4}}
+
 
 def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
                ) -> MambaCache:

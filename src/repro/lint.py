@@ -11,7 +11,8 @@ pallas-grid write model of every kernel the plan would compile to.
 ``brainslug-cnn`` verifies the full VGG NetGraph end to end (graph SSA +
 dead values, then each nhwc stack segment); ``paged-kv`` self-tests the
 serve engine's block-table soundness family (``kv.*``) against a seeded
-mutant.
+mutant; ``serve-dist`` does the same for the serving decode-cache
+partition family (``dist.serve-*``).
 
 Exit status is 1 when any *error*-severity finding survives; warnings
 are reported but do not fail the run.  ``--out`` writes the full finding
@@ -283,6 +284,81 @@ def lint_dist_selftest(device: resource.DeviceSpec) -> list[verify.Finding]:
     return fs
 
 
+def lint_serve_dist() -> list[verify.Finding]:
+    """Self-test of the ``dist.serve-*`` family (the serving shard_map's
+    decode-cache partition): the planner-derived plan for a dense
+    qwen2.5-32b cache under the production-shaped mesh must engage both
+    splits and verify clean, while seeded mutants — a pool leaf sharded
+    over the batch axis, an over-rank spec, a spec naming a mesh axis that
+    does not exist, and one slot leaf left replicated while the rest
+    shard — must each be caught and the strict mode must raise.  A checker
+    that waves a mutant through is itself the lint failure."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.models import lm
+
+    fs: list[verify.Finding] = []
+    axes = _DIST_AXES
+    cfg = get_config("qwen2.5-32b").reduced()
+    slots = 8
+    # eval_shape only — the lint never materializes the cache
+    shapes = jax.eval_shape(
+        lambda: lm.init_decode_cache(cfg, slots, 64, dtype=jnp.float32))
+    plan = partition.plan_decode_cache(
+        shapes, "auto", axes, slots=slots,
+        head_extents=(cfg.n_heads, cfg.n_kv_heads))
+    if not (plan.use_data and plan.use_model):
+        fs.append(verify.Finding(
+            "dist.serve-slot-axis", "error", "serve-dist/selftest-clean",
+            f"planner fenced a cleanly shardable dense cache: {plan.notes}"))
+    for f in verify.check_decode_plan(plan):
+        fs.append(verify.Finding(
+            f.invariant, "error", "serve-dist/selftest-clean",
+            f"checker flagged a planner-derived decode plan: {f}"))
+
+    def mutate(field: str, **changes) -> partition.DecodeCachePlan:
+        # tamper with every leaf whose path ends in `field` (e.g. the KV
+        # "k" leaves of each attention layer)
+        leaves = tuple(
+            dataclasses.replace(leaf, **changes)
+            if leaf.path.rsplit("/", 1)[-1] == field else leaf
+            for leaf in plan.leaves)
+        return dataclasses.replace(plan, leaves=leaves)
+
+    k_leaf = next(leaf for leaf in plan.leaves
+                  if leaf.path.rsplit("/", 1)[-1] == "k")
+    rank = len(k_leaf.shape)
+    mutants = [
+        # the KV columns re-declared as a shared physical pool while still
+        # slot-sharded: the scatter-divergence hazard
+        ("dist.serve-pool-write", mutate("k", kind="pool")),
+        ("dist.spec-rank", mutate("k", spec=P(*([None] * (rank + 1))))),
+        ("dist.mesh-axis", mutate("k", spec=P("pod"))),
+        # lengths replicated while the KV slot dims shard over "data"
+        ("dist.serve-slot-axis", mutate("length", spec=P(None))),
+    ]
+    for want, mutant in mutants:
+        got = verify.check_decode_plan(mutant)
+        if not any(f.invariant == want and f.severity == "error"
+                   for f in got):
+            fs.append(verify.Finding(
+                want, "error", "serve-dist/selftest-mutant",
+                f"seeded {want} mutant was not caught"))
+            continue
+        try:
+            verify.enforce(got, "strict", subject="serve-dist selftest")
+        except verify.VerifyError:
+            pass
+        else:
+            fs.append(verify.Finding(
+                want, "error", "serve-dist/selftest-mutant",
+                f"strict mode did not raise on the seeded {want} mutant"))
+    return fs
+
+
 def lint_arch(arch: str, device: resource.DeviceSpec,
               rows: int = _ROWS) -> list[verify.Finding]:
     if arch == "brainslug-cnn":
@@ -291,6 +367,8 @@ def lint_arch(arch: str, device: resource.DeviceSpec,
         return lint_paged_kv()
     if arch == "dist-partition":
         return lint_dist_selftest(device)
+    if arch == "serve-dist":
+        return lint_serve_dist()
     return lint_lm_arch(arch, device, rows)
 
 
@@ -311,7 +389,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     archs = args.arch or [*ARCH_IDS, "brainslug-cnn", "paged-kv",
-                          "dist-partition"]
+                          "dist-partition", "serve-dist"]
     device = _DEVICES[args.device]
 
     report: dict = {"device": device.name, "archs": {}}

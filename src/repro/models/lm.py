@@ -541,6 +541,59 @@ def ce_loss_fn(h: jnp.ndarray, w: jnp.ndarray,
     return jnp.sum(-gold * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
 
+def tp_local_config(cfg: ModelConfig, model_extent: int) -> ModelConfig:
+    """Region-local config for an attention-tensor-parallel shard_map body.
+
+    Inside the region every shard holds ``n_heads / m`` query heads and
+    ``n_kv_heads / m`` KV heads, and the attention projections reshape by
+    ``cfg.n_heads`` — so the body must run against a localized config.
+    ``d_head`` is pinned to the global head size first: for configs that
+    derive it as ``d_model // n_heads``, halving ``n_heads`` must not
+    change the per-head width.
+    """
+    if model_extent <= 1:
+        return cfg
+    if cfg.n_heads % model_extent or cfg.n_kv_heads % model_extent:
+        raise ValueError(
+            f"{cfg.name}: heads ({cfg.n_heads}, kv {cfg.n_kv_heads}) not "
+            f"divisible by model={model_extent}")
+    return dataclasses.replace(
+        cfg, d_head=cfg.head_dim,
+        n_heads=cfg.n_heads // model_extent,
+        n_kv_heads=cfg.n_kv_heads // model_extent)
+
+
+#: Attention projection leaves and the dim "model" shards when the serve
+#: plan tensor-parallelizes heads: q/k/v projections (and their biases)
+#: split their *output* columns per head-group; wo splits its input rows,
+#: closed by one psum after the out-projection (see layers.attention).
+_TP_COL_LEAVES = frozenset({"wq", "wk", "wv", "bq", "bk", "bv"})
+_TP_ROW_LEAVES = frozenset({"wo"})
+
+
+def tp_param_specs(params: Any, model_extent: int) -> Any:
+    """PartitionSpec tree (congruent with ``params``) for attention-only
+    tensor parallelism: projection leaves under an ``"attn"`` subtree
+    shard over "model"; everything else — norms, MLP/MoE, mamba mixers,
+    embeddings, the vocab head — replicates (the mamba gated norm reduces
+    over the full d_inner, so its state must stay whole per shard)."""
+    from jax.sharding import PartitionSpec as P
+
+    def walk(node: Any, in_attn: bool, name: str) -> Any:
+        if isinstance(node, dict):
+            return {k: walk(v, in_attn or k == "attn", k)
+                    for k, v in node.items()}
+        parts: list = [None] * node.ndim
+        if in_attn and model_extent > 1:
+            if name in _TP_COL_LEAVES:
+                parts[-1] = "model"
+            elif name in _TP_ROW_LEAVES:
+                parts[-2] = "model"
+        return P(*parts)
+
+    return walk(params, False, "")
+
+
 def decode_step(params, cache: dict, tokens_t: jnp.ndarray,
                 cfg: ModelConfig, rt: RuntimeConfig,
                 active: jnp.ndarray | None = None,

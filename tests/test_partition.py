@@ -220,6 +220,132 @@ class TestLintIntegration:
         assert verify.errors(
             lint.lint_dist_selftest(resource.TPU_V5E)) == []
 
+    def test_serve_dist_selftest_clean(self):
+        from repro import lint
+        assert verify.errors(lint.lint_serve_dist()) == []
+
+
+class TestDecodeCachePlan:
+    """The serving decode-cache planner (``plan_decode_cache``) and its
+    verifier family (``check_decode_plan``) — all on ``jax.eval_shape``
+    trees, no cache is materialized."""
+
+    def _shapes(self, slots=8, **kw):
+        from repro.configs import get_config
+        from repro.models import lm
+        cfg = get_config("qwen2.5-32b").reduced()
+        shapes = jax.eval_shape(
+            lambda: lm.init_decode_cache(cfg, slots, 64, dtype=jnp.float32,
+                                         **kw))
+        return cfg, shapes
+
+    def test_dense_cache_shards_both_axes(self):
+        cfg, shapes = self._shapes()
+        plan = partition.plan_decode_cache(
+            shapes, "auto", AXES, slots=8,
+            head_extents=(cfg.n_heads, cfg.n_kv_heads))
+        assert plan.use_data and plan.use_model and plan.active
+        k = next(lf for lf in plan.leaves if lf.path.endswith("/k"))
+        ent = tuple(k.spec)
+        assert ent[k.slot_dim] == "data"
+        assert ent[k.model_dim] == "model"
+        # lengths carry the slot extent too — same axis, last dim
+        ln = next(lf for lf in plan.leaves if lf.path.endswith("/length"))
+        assert tuple(ln.spec)[ln.slot_dim] == "data"
+        assert verify.errors(verify.check_decode_plan(plan)) == []
+
+    def test_paged_pools_fence_data_split(self):
+        cfg, shapes = self._shapes(kv_layout="paged", kv_num_blocks=16,
+                                   kv_block_size=4)
+        plan = partition.plan_decode_cache(
+            shapes, "auto", AXES, slots=8,
+            head_extents=(cfg.n_heads, cfg.n_kv_heads))
+        assert not plan.use_data
+        assert plan.use_model
+        assert any("pool" in n for n in plan.notes)
+        pools = [lf for lf in plan.leaves if lf.kind == "pool"]
+        assert pools
+        assert all("data" not in tuple(p.spec) for p in pools)
+        assert verify.errors(verify.check_decode_plan(plan)) == []
+
+    def test_indivisible_slots_fence_data(self):
+        cfg, shapes = self._shapes(slots=6)      # 6 % data=4 != 0
+        plan = partition.plan_decode_cache(
+            shapes, "auto", AXES, slots=6,
+            head_extents=(cfg.n_heads, cfg.n_kv_heads))
+        assert not plan.use_data
+        assert any("not divisible" in n for n in plan.notes)
+
+    def test_indivisible_heads_fence_model(self):
+        cfg, shapes = self._shapes()
+        plan = partition.plan_decode_cache(
+            shapes, "auto", AXES, slots=8, head_extents=(3,))
+        assert not plan.use_model
+        assert any("head split fenced" in n for n in plan.notes)
+
+    def test_explicit_partition_selects_axes(self):
+        cfg, shapes = self._shapes()
+        he = (cfg.n_heads, cfg.n_kv_heads)
+        data_only = partition.plan_decode_cache(shapes, "data", AXES,
+                                                slots=8, head_extents=he)
+        assert data_only.use_data and not data_only.use_model
+        tensor = partition.plan_decode_cache(shapes, "tensor", AXES,
+                                             slots=8, head_extents=he)
+        assert tensor.use_model and not tensor.use_data
+        with pytest.raises(ValueError, match="unknown serve partition"):
+            partition.plan_decode_cache(shapes, "bogus", AXES, slots=8)
+
+    def test_mamba_recurrent_state_shards_slots(self):
+        """MambaCache declares conv/SSM slot dims via CACHE_AXES: the ssm
+        family's per-slot recurrent state data-shards like KV columns."""
+        from repro.configs import get_config
+        from repro.models import lm
+        cfg = get_config("mamba2-2.7b").reduced()
+        shapes = jax.eval_shape(
+            lambda: lm.init_decode_cache(cfg, 8, 64, dtype=jnp.float32))
+        plan = partition.plan_decode_cache(shapes, "auto", AXES, slots=8)
+        assert plan.use_data
+        conv = [lf for lf in plan.leaves if lf.path.endswith("/conv")]
+        assert conv
+        assert all(tuple(lf.spec)[lf.slot_dim] == "data" for lf in conv)
+
+    def test_spec_tree_congruent_and_operand_specs(self):
+        cfg, shapes = self._shapes()
+        plan = partition.plan_decode_cache(
+            shapes, "auto", AXES, slots=8,
+            head_extents=(cfg.n_heads, cfg.n_kv_heads))
+        st = plan.spec_tree(shapes)
+        sub = st["blocks"]["sub0"]
+        assert tuple(sub.length)[-1] == "data"
+        # step operands: slot-batched ride "data", slot-free replicate
+        assert tuple(plan.operand_spec(2)) == ("data", None)
+        assert tuple(plan.operand_spec(1, slot_dim=None)) == (None,)
+
+    def test_verifier_catches_seeded_mutants(self):
+        cfg, shapes = self._shapes()
+        plan = partition.plan_decode_cache(
+            shapes, "auto", AXES, slots=8,
+            head_extents=(cfg.n_heads, cfg.n_kv_heads))
+
+        def mutate(field, **changes):
+            leaves = tuple(
+                dataclasses.replace(lf, **changes)
+                if lf.path.rsplit("/", 1)[-1] == field else lf
+                for lf in plan.leaves)
+            return dataclasses.replace(plan, leaves=leaves)
+
+        cases = [
+            ("dist.serve-pool-write", mutate("k", kind="pool")),
+            ("dist.serve-slot-axis", mutate("length", spec=P(None))),
+            ("dist.mesh-axis", mutate("k", spec=P("pod"))),
+            ("dist.spec-rank",
+             mutate("length", spec=P(*["data"] + [None] * 8))),
+        ]
+        for want, mutant in cases:
+            got = verify.check_decode_plan(mutant)
+            assert any(f.invariant == want and f.severity == "error"
+                       for f in got), (want, got)
+
 
 class TestCompressionErrorState:
     def test_roundtrip_accumulates_error(self):

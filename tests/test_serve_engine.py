@@ -345,6 +345,49 @@ class TestEngine:
         comps = dense_server.engine(slots=2).run(reqs)
         assert [c.status for c in comps] == ["ok", "ok"]
 
+    def test_brainslug_paged_dispatches_pallas_with_parity(self):
+        """Serving default under mode='brainslug': the mixed step's paged
+        decode compiles the pallas ``paged_flash_decode`` kernel (the
+        trace-time counter moves), and greedy completions stay
+        token-identical to the xla reference engine — the same parity
+        gate CI runs through the benchmark smoke."""
+        from repro.kernels.attention import ops as attn_ops
+
+        sc = ServeConfig(arch="qwen2.5-14b", batch=2, prompt_len=6,
+                         new_tokens=5, max_len=16)
+        ref = Server(sc)
+        fast = Server(dataclasses.replace(sc, mode="brainslug"))
+        rng = np.random.default_rng(13)
+        reqs = [Request(request_id=i,
+                        prompt=rng.integers(0, ref.cfg.vocab_size,
+                                            (p,)).astype(np.int32),
+                        max_new_tokens=t)
+                for i, (p, t) in enumerate([(5, 4), (2, 5), (4, 3)])]
+        out_ref = ref.engine(slots=2, prefill_chunk=4, kv_layout="paged",
+                             kv_block_size=4).run(reqs)
+        before = attn_ops.STATS.snapshot()
+        eng = fast.engine(slots=2, prefill_chunk=4, kv_layout="paged",
+                          kv_block_size=4)
+        out_fast = eng.run(reqs)
+        delta = attn_ops.STATS.delta(before)
+        assert delta.get("paged_decode_pallas", 0) >= 1, delta
+        assert delta.get("paged_decode_ref", 0) == 0, delta
+        rep = eng.report()
+        assert rep["decode_path"] == "pallas-paged-decode", rep
+        assert rep["decode_fallback"] is None, rep
+        for a, b in zip(out_ref, out_fast):
+            assert a.tokens.tolist() == b.tokens.tolist(), a.request_id
+
+    def test_xla_engine_reports_ref_fallback(self, dense_server,
+                                             dense_prompts):
+        eng = dense_server.engine(slots=2)
+        eng.run([Request(request_id=0, prompt=dense_prompts[0],
+                         max_new_tokens=2)])
+        rep = eng.report()
+        assert rep["decode_path"] == "ref-decode"
+        assert "brainslug" in rep["decode_fallback"]
+        assert rep["mesh_axes"] == {}
+
     def test_reset_slots_clears_only_masked(self, dense_server):
         cfg, rt, params = (dense_server.cfg, dense_server.rt,
                            dense_server.params)

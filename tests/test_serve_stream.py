@@ -1,0 +1,161 @@
+"""Streaming-output tests for the continuous-batching engine: per-request
+``Request.on_token`` callbacks, the run-level ``on_token`` hook, the
+``Engine.stream`` generator, and the TTFT percentiles the one-per-tick
+clock stamps.
+
+The invariant under test everywhere: streaming is an *observation* of the
+scheduler's commit order, never a change to it — every request's event
+token sequence equals its final Completion tokens, exactly one terminal
+event closes each request (including failures), and a streamed run
+generates the same tokens as a drained one.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.launch.engine import Request, TokenEvent
+from repro.launch.serve import ServeConfig, Server
+
+
+@pytest.fixture(scope="module")
+def server():
+    return Server(ServeConfig(arch="deepseek-7b", batch=2, prompt_len=6,
+                              new_tokens=6, max_len=16))
+
+
+def _queue(server, n=5, seed=7, on_token=None):
+    """Ragged greedy traffic with more requests than slots, so freed
+    slots refill mid-stream."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(1, 7))
+        reqs.append(Request(
+            request_id=i,
+            prompt=rng.integers(0, server.cfg.vocab_size,
+                                (plen,)).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 7)),
+            on_token=on_token))
+    return reqs
+
+
+class TestCallbacks:
+    def test_per_request_callback_matches_completions(self, server):
+        """Every request's callback sees its tokens in commit order —
+        token-for-token what its Completion reports — and exactly one
+        terminal event carrying that Completion, with slot refill
+        happening mid-stream (5 requests through 2 slots)."""
+        events: dict[int, list[TokenEvent]] = {}
+
+        def cb(ev):
+            events.setdefault(ev.request_id, []).append(ev)
+
+        reqs = _queue(server, on_token=cb)
+        comps = server.engine(slots=2, prefill_chunk=4).run(reqs)
+        assert set(events) == {r.request_id for r in reqs}
+        for c in comps:
+            evs = events[c.request_id]
+            toks, terminal = evs[:-1], evs[-1]
+            assert [e.token for e in toks] == c.tokens.tolist()
+            assert [e.index for e in toks] == list(range(len(toks)))
+            assert not any(e.done for e in toks)
+            assert terminal.done and terminal.token is None
+            assert terminal.completion is c
+            assert terminal.index == len(c.tokens)
+
+    def test_run_level_hook_sees_every_event(self, server):
+        """``Engine.run(reqs, on_token=...)`` observes the same global
+        event stream (all requests interleaved in commit order)."""
+        seen: list[TokenEvent] = []
+        reqs = _queue(server)
+        comps = server.engine(slots=2, prefill_chunk=4).run(
+            reqs, on_token=seen.append)
+        n_tokens = sum(len(c.tokens) for c in comps)
+        assert len(seen) == n_tokens + len(reqs)
+        assert sum(e.done for e in seen) == len(reqs)
+        # a request's terminal event comes after all its token events
+        for c in comps:
+            mine = [e for e in seen if e.request_id == c.request_id]
+            assert [e.token for e in mine[:-1]] == c.tokens.tolist()
+            assert mine[-1].done
+
+    def test_streaming_does_not_change_tokens(self, server):
+        """Observation only: a streamed run generates exactly what a
+        drained run generates on the same queue."""
+        reqs = _queue(server)
+        streamed = server.engine(slots=2, prefill_chunk=4).run(
+            reqs, on_token=lambda ev: None)
+        drained = server.engine(slots=2, prefill_chunk=4).run(reqs)
+        for a, b in zip(streamed, drained):
+            assert a.tokens.tolist() == b.tokens.tolist()
+
+
+class TestGenerator:
+    def test_stream_yields_commit_order(self, server):
+        reqs = _queue(server)
+        engine = server.engine(slots=2, prefill_chunk=4)
+        done: list = []
+        indices: dict[int, int] = {}
+        n_tok = 0
+        for ev in engine.stream(reqs):
+            if ev.done:
+                done.append(ev.completion)
+                continue
+            n_tok += 1
+            # per-request indices must be contiguous from 0 even though
+            # the global stream interleaves slots
+            assert ev.index == indices.get(ev.request_id, 0)
+            indices[ev.request_id] = ev.index + 1
+        assert len(done) == len(reqs)
+        assert n_tok == sum(len(c.tokens) for c in done)
+        # results come back in submission order, as with run()
+        assert sorted(c.request_id for c in done) == [r.request_id
+                                                      for r in reqs]
+
+
+class TestFailureEvents:
+    def test_invalid_request_gets_terminal_event_only(self, server):
+        """A request that fails validation still closes its stream: one
+        terminal event, no token events, the 'invalid' Completion."""
+        events: list[TokenEvent] = []
+        bad = Request(request_id=0, prompt=np.zeros(20, np.int32),
+                      max_new_tokens=10, on_token=events.append)  # 30 > 16
+        comps = server.engine(slots=2).run([bad])
+        assert comps[0].status == "invalid"
+        assert len(events) == 1
+        assert events[0].done and events[0].token is None
+        assert events[0].completion is comps[0]
+
+    def test_timeout_gets_terminal_event(self, server):
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(0, server.cfg.vocab_size,
+                                (4,)).astype(np.int32) for _ in range(2)]
+        events: list[TokenEvent] = []
+        reqs = [Request(request_id=0, prompt=prompts[0], max_new_tokens=4),
+                Request(request_id=1, prompt=prompts[1], max_new_tokens=2,
+                        deadline_ms=0.0, on_token=events.append)]
+        comps = server.engine(slots=1).run(reqs)    # one slot: r1 waits
+        assert comps[1].status == "timeout"
+        assert [e.done for e in events] == [True]
+        assert events[0].completion is comps[1]
+
+    def test_zero_new_tokens_closes_stream(self, server):
+        events: list[TokenEvent] = []
+        comps = server.engine(slots=1).run(
+            [Request(request_id=0, prompt=np.zeros(4, np.int32),
+                     max_new_tokens=0, on_token=events.append)])
+        assert comps[0].status == "ok"
+        assert [(e.done, e.token) for e in events] == [(True, None)]
+
+
+class TestTTFT:
+    def test_percentiles_stamped(self, server):
+        engine = server.engine(slots=2, prefill_chunk=4)
+        engine.run(_queue(server))
+        s = engine.last_stats
+        assert s.ttft_p50_ms > 0.0
+        assert s.ttft_p99_ms >= s.ttft_p50_ms
+        # TTFT precedes full-request latency by construction
+        assert s.ttft_p50_ms <= s.p50_latency_ms
+        assert "ttft_p50_ms" in s.as_dict()
